@@ -1,0 +1,68 @@
+"""BabelStream (section 6.2): measures attainable memory bandwidth with the
+five STREAM kernels.
+
+Two modes, reported together:
+  * host wall-clock MB/s of the jnp oracle on THIS machine (CPU in this
+    container) — a true measured bandwidth, exactly what the paper does
+    with HIP BabelStream on the MI60/MI100;
+  * the Pallas-TPU kernels validated in interpret mode (correctness), with
+    the v5e ceiling taken from the hardware spec for the IRM plots (the
+    container cannot execute TPU code — DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.stream import ref
+
+SHAPE = (4096, 2048)                 # 32 MiB fp32 per array
+DTYPE = jnp.float32
+
+
+def _timeit(fn, *args, iters: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench() -> List[str]:
+    nbytes = SHAPE[0] * SHAPE[1] * 4
+    ks = jax.random.split(jax.random.key(0), 3)
+    a = jax.random.normal(ks[0], SHAPE, DTYPE)
+    b = jax.random.normal(ks[1], SHAPE, DTYPE)
+    c = jax.random.normal(ks[2], SHAPE, DTYPE)
+
+    cases = [
+        ("copy", jax.jit(ref.copy), (a,), 2 * nbytes),
+        ("mul", jax.jit(ref.mul), (c,), 2 * nbytes),
+        ("add", jax.jit(ref.add), (a, b), 3 * nbytes),
+        ("triad", jax.jit(ref.triad), (b, c), 3 * nbytes),
+        ("dot", jax.jit(ref.dot), (a, b), 2 * nbytes),
+    ]
+    lines = []
+    for name, fn, args, moved in cases:
+        dt = _timeit(fn, *args)
+        mbs = moved / dt / 1e6
+        lines.append(f"babelstream/{name},{dt*1e6:.0f},host_MBps={mbs:.0f}")
+    # Pallas kernel equivalence check (interpret mode) on a small shape
+    from repro.kernels.stream import stream
+    sa = a[:256, :512]
+    sb = b[:256, :512]
+    ok = bool(np.allclose(np.asarray(stream.add(sa, sb, interpret=True)),
+                          np.asarray(ref.add(sa, sb)), rtol=1e-6))
+    lines.append(f"babelstream/pallas_validate,0,allclose={ok}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

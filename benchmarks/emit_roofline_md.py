@@ -1,0 +1,52 @@
+"""Emits the EXPERIMENTS.md roofline tables (markdown) from the dry-run
+JSON records.  Usage:
+    PYTHONPATH=src python -m benchmarks.emit_roofline_md [results_dir]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def emit(results_dir: str) -> str:
+    lines = []
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+
+    lines.append("| cell | mesh | comp ms | mem ms | coll ms | dominant | "
+                 "modeled ms | useful | MFU | MXU pad | GiB/dev | fits |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    skips = []
+    for r in recs:
+        if "skipped" in r:
+            skips.append(r["cell"])
+            continue
+        if "error" in r:
+            lines.append(f"| {r['cell']} | — | ERROR: {r['error'][:60]} |")
+            continue
+        rl, irm, mem = r["roofline"], r["irm"], r["memory"]
+        gib = mem["device_total_bytes"] / 2 ** 30
+        arch, shape, mesh = r["arch"], r["shape"], r["mesh"]
+        lines.append(
+            f"| {arch}/{shape} | {mesh} "
+            f"| {rl['compute_s']*1e3:.0f} | {rl['memory_s']*1e3:.0f} "
+            f"| {rl['collective_s']*1e3:.0f} | {rl['dominant']} "
+            f"| {rl['modeled_time_s']*1e3:.0f} "
+            f"| {rl['useful_flops_ratio'] or 0:.2f} "
+            f"| {rl['mfu_vs_peak']*100:.1f}% "
+            f"| {irm['mxu_padding_efficiency']*100:.0f}% "
+            f"| {gib:.1f} | {'Y' if gib <= 16 else 'OVER'} |")
+    lines.append("")
+    lines.append(f"Skipped cells ({len(skips)}): long_500k on pure "
+                 "full-attention archs (DESIGN.md section 'Shape skips').")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "results", "dryrun")
+    print(emit(d))

@@ -1,0 +1,188 @@
+"""Kernel-adjusted roofline: substitute the Pallas kernels' analytic HBM
+traffic for the XLA-jnp interior traffic of the hot regions.
+
+Why: the container cannot LOWER TPU Pallas kernels (XLA:CPU), so the dry-run
+censuses the pure-jnp model path — whose attention / selective-scan
+interiors materialize every block tensor at fusion boundaries.  On a real
+TPU those regions run as the validated Pallas kernels
+(repro/kernels/flash_attention, repro/kernels/ssm_scan) whose HBM traffic
+is exactly kernel inputs + outputs (state/softmax blocks stay in VMEM).
+
+Method (per cell):
+  1. lower + census the jnp region function ALONE at the cell's per-device
+     local shapes (forward, and its VJP for train cells);
+  2. region_total = census x (#applications: layers x microbatches, with
+     the remat forward recompute counted);
+  3. adjusted_hbm = cell_hbm - region_jnp + region_kernel_analytic;
+     recompute the three terms and the bottleneck.
+
+This mirrors the paper's own move: when the toolchain cannot measure a
+quantity directly, substitute a validated model of it and say so
+(BabelStream ceilings, section 6.2).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get as get_arch
+from repro.core.hardware import TPU_V5E
+from repro.core.hlo_counters import census_from_compiled
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _census_fn(fn, *specs):
+    compiled = jax.jit(fn).lower(*specs).compile()
+    return census_from_compiled(compiled)
+
+
+def flash_region(arch: str, shape_name: str, n_model: int = 16,
+                 n_dp: int = 16, microbatches: int = 1) -> Dict[str, float]:
+    """jnp-flash vs Pallas-kernel traffic for one cell's attention stack."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    B_loc = max(1, shape.global_batch // n_dp // microbatches)
+    S = shape.seq_len
+    H_loc = max(1, math.ceil(cfg.n_heads / n_model))
+    D = cfg.head_dim
+    from repro.models.flash import flash_attention_ref
+    sds = jax.ShapeDtypeStruct((B_loc, S, H_loc, D), jnp.bfloat16)
+
+    def fwd(q, k, v):
+        return flash_attention_ref(q, k, v, True, cfg.attn_chunk_q,
+                                   cfg.attn_chunk_kv)
+
+    def bwd(q, k, v):
+        out, vjp = jax.vjp(fwd, q, k, v)
+        return vjp(out)
+
+    c_fwd = _census_fn(fwd, sds, sds, sds)
+    c_bwd = _census_fn(bwd, sds, sds, sds)
+
+    qkv_bytes = B_loc * S * H_loc * D * 2.0
+    kern_fwd = 4 * qkv_bytes + B_loc * S * H_loc * 4           # q,k,v,o + L
+    kern_bwd = 10 * qkv_bytes + 2 * B_loc * S * H_loc * 4      # 2-pass
+    apps = cfg.n_layers * microbatches
+    if cfg.family == "hybrid":
+        apps = (cfg.n_layers // max(1, cfg.attn_every)) * microbatches
+    train = shape.kind == "train"
+    jnp_bytes = apps * (c_fwd.hbm_bytes * (2 if train else 1)
+                        + (c_bwd.hbm_bytes if train else 0))
+    kern_bytes = apps * (kern_fwd * (2 if train else 1)
+                         + (kern_bwd if train else 0))
+    return {"jnp_bytes": jnp_bytes, "kernel_bytes": kern_bytes,
+            "applications": apps}
+
+
+def ssm_region(arch: str, shape_name: str, n_model: int = 16,
+               n_dp: int = 16, microbatches: int = 1) -> Dict[str, float]:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    B_loc = max(1, shape.global_batch // n_dp // microbatches)
+    S = shape.seq_len
+    d_loc = max(128, cfg.d_model * cfg.ssm_expand // n_model)
+    N = cfg.ssm_state
+    from repro.models.ssm import mamba1_scan
+    from repro.kernels.ssm_scan.scan import analytic_hbm_bytes
+
+    x = jax.ShapeDtypeStruct((B_loc, S, d_loc), jnp.float32)
+    dt = jax.ShapeDtypeStruct((B_loc, S, d_loc), jnp.float32)
+    A = jax.ShapeDtypeStruct((d_loc, N), jnp.float32)
+    bc = jax.ShapeDtypeStruct((B_loc, S, N), jnp.float32)
+
+    def fwd(x, dt, A, Bc, Cc):
+        return mamba1_scan(x, dt, A, Bc, Cc, cfg.ssm_chunk)[0]
+
+    def bwd(x, dt, A, Bc, Cc):
+        out, vjp = jax.vjp(fwd, x, dt, A, Bc, Cc)
+        return vjp(out)
+
+    c_fwd = _census_fn(fwd, x, dt, A, bc, bc)
+    c_bwd = _census_fn(bwd, x, dt, A, bc, bc)
+    kern_fwd = analytic_hbm_bytes(B_loc, S, d_loc, N)
+    kern_bwd = 3 * kern_fwd                    # recompute + grads streamed
+    apps = cfg.n_layers * microbatches
+    train = shape.kind == "train"
+    jnp_bytes = apps * (c_fwd.hbm_bytes * (2 if train else 1)
+                        + (c_bwd.hbm_bytes if train else 0))
+    kern_bytes = apps * (kern_fwd * (2 if train else 1)
+                         + (kern_bwd if train else 0))
+    return {"jnp_bytes": jnp_bytes, "kernel_bytes": kern_bytes,
+            "applications": apps}
+
+
+def adjust_cell(arch: str, shape_name: str,
+                mesh_name: str = "pod16x16") -> Optional[Dict]:
+    path = os.path.join(RESULTS, f"{arch}__{shape_name}__{mesh_name}.json")
+    if not os.path.exists(path):
+        return None
+    rec = json.load(open(path))
+    if "roofline" not in rec:
+        return None
+    mb = rec.get("build_info", {}).get("microbatches", 1) or 1
+    cfg = get_arch(arch)
+    regions = []
+    if cfg.mamba_version == 1:
+        regions.append(ssm_region(arch, shape_name, microbatches=mb))
+    if not cfg.is_attention_free:
+        regions.append(flash_region(arch, shape_name, microbatches=mb))
+    hbm = rec["census"]["hbm_bytes"]
+    adj = hbm
+    for r in regions:
+        adj = adj - min(r["jnp_bytes"], adj) + r["kernel_bytes"]
+    hw = TPU_V5E
+    mem_s = adj / (hw.memory_ceiling_gbs() * 1e9)
+    comp_s = rec["roofline"]["compute_s"]
+    coll_s = rec["roofline"]["collective_s"]
+    modeled = max(mem_s, comp_s, coll_s)
+    mf = rec["roofline"].get("useful_flops_ratio")
+    model_flops_dev = (mf or 0) * rec["roofline"]["flops_per_dev"]
+    return {
+        "cell": rec["cell"],
+        "hbm_before": hbm, "hbm_after": adj,
+        "modeled_before_s": rec["roofline"]["modeled_time_s"],
+        "modeled_after_s": modeled,
+        "dominant_after": max((("memory", mem_s), ("compute", comp_s),
+                               ("collective", coll_s)),
+                              key=lambda kv: kv[1])[0],
+        "mfu_after": (model_flops_dev / (modeled * hw.peak_flops_bf16)
+                      if modeled else 0.0),
+    }
+
+
+CELLS = [
+    ("llama4-scout-17b-a16e", "train_4k", "pod16x16"),
+    ("falcon-mamba-7b", "train_4k", "pod16x16"),
+    ("granite-8b", "prefill_32k", "pod16x16"),
+]
+
+
+def bench():
+    lines = []
+    for arch, shape, mesh in CELLS:
+        try:
+            r = adjust_cell(arch, shape, mesh)
+        except Exception as e:                       # noqa: BLE001
+            lines.append(f"kernel_adjusted/{arch}/{shape},0,"
+                         f"{type(e).__name__}:{e}")
+            continue
+        if r is None:
+            continue
+        lines.append(
+            f"kernel_adjusted/{arch}/{shape},{r['modeled_after_s']*1e6:.0f},"
+            f"before_ms={r['modeled_before_s']*1e3:.0f};"
+            f"after_ms={r['modeled_after_s']*1e3:.0f};"
+            f"dominant={r['dominant_after']};"
+            f"mfu_after={r['mfu_after']*100:.1f}%")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

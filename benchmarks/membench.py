@@ -1,0 +1,66 @@
+"""gpumembench analogue (section 6.2): on-chip / instruction-throughput
+microbenchmarks.
+
+Measures host wall-clock instruction throughput for VPU-class (elementwise)
+and MXU-class (matmul) work at several working-set sizes, and reports the
+modeled TPU v5e instruction ceilings from the issue model (Eq. 3 analogue) —
+those are the horizontal roofs on the TPU IRM plots."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import TPU_V5E
+
+
+def _timeit(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench() -> List[str]:
+    lines = []
+    # VPU-class: fused multiply-add chains
+    for n in (1 << 16, 1 << 20, 1 << 22):
+        x = jnp.ones((n,), jnp.float32)
+
+        @jax.jit
+        def vpu(x):
+            for _ in range(8):
+                x = x * 1.000001 + 1e-6
+            return x
+
+        dt = _timeit(vpu, x)
+        gops = 16 * n / dt / 1e9
+        lines.append(f"membench/vpu_n{n},{dt*1e6:.0f},host_GFLOPs={gops:.2f}")
+    # MXU-class: square matmuls
+    for d in (256, 512, 1024):
+        m = jnp.ones((d, d), jnp.float32)
+
+        @jax.jit
+        def mxu(m):
+            return m @ m
+
+        dt = _timeit(mxu, m)
+        gf = 2 * d ** 3 / dt / 1e9
+        lines.append(f"membench/mxu_d{d},{dt*1e6:.0f},host_GFLOPs={gf:.1f}")
+    hw = TPU_V5E
+    lines.append(
+        f"membench/tpu_ceilings,0,"
+        f"mxu_GIPS={hw.peak_mxu_issues_per_s()/1e9:.4f};"
+        f"vpu_GIPS={hw.peak_vpu_issues_per_s()/1e9:.3f};"
+        f"bf16_TFLOPs={hw.peak_flops_bf16/1e12:.0f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

@@ -1,0 +1,46 @@
+"""Paper Figures 5-7 reproduction: instruction roofline plots (inst/byte) for
+the V100 / MI60 / MI100 on the LWFA and TWEAC ComputeCurrent kernels,
+written as PNGs under benchmarks/results/plots/."""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+from repro.core import paper_data
+from repro.core.hardware import MI100, MI60, V100
+from repro.core.irm import gpu_irm
+from repro.core.plotting import plot_irm
+
+PLOT_DIR = os.path.join(os.path.dirname(__file__), "results", "plots")
+
+
+def make_plots() -> List[str]:
+    os.makedirs(PLOT_DIR, exist_ok=True)
+    out = []
+    cases = [
+        ("fig5_v100_lwfa", V100, [paper_data.LWFA_V100]),
+        ("fig6_amd_lwfa_mi60", MI60, [paper_data.LWFA_MI60]),
+        ("fig6_amd_lwfa_mi100", MI100, [paper_data.LWFA_MI100]),
+        ("fig7_amd_tweac_mi60", MI60, [paper_data.TWEAC_MI60]),
+        ("fig7_amd_tweac_mi100", MI100, [paper_data.TWEAC_MI100]),
+        ("v100_tweac", V100, [paper_data.TWEAC_V100]),
+    ]
+    for name, hw, ms in cases:
+        model = gpu_irm(hw, ms, title=f"{name} — {hw.name}")
+        path = os.path.join(PLOT_DIR, f"{name}.png")
+        plot_irm(model, path)
+        out.append(path)
+    return out
+
+
+def bench() -> List[str]:
+    t0 = time.perf_counter()
+    paths = make_plots()
+    us = (time.perf_counter() - t0) * 1e6 / len(paths)
+    return [f"paper/rooflines,{us:.0f},plots={len(paths)}"]
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

@@ -1,0 +1,58 @@
+"""Paper Tables 1 & 2 reproduction (LWFA / TWEAC ComputeCurrent kernel).
+
+Recomputes Peak GIPS (Eq. 3), Achieved GIPS (Eq. 4) and Instruction Intensity
+(Eq. 2) from the paper's raw counter values and reports them next to the
+published numbers.  This is the faithfulness gate: EXPERIMENTS.md quotes the
+deltas."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import paper_data
+
+
+def rows() -> List[dict]:
+    out = []
+    for tname, table, published in (
+            ("table1_lwfa", paper_data.TABLE1, paper_data.LWFA_PUBLISHED),
+            ("table2_tweac", paper_data.TABLE2, paper_data.TWEAC_PUBLISHED)):
+        for gpu, m in table.items():
+            pub = published[gpu]
+            out.append({
+                "table": tname,
+                "gpu": gpu,
+                "peak_gips": m.peak_gips(),
+                "peak_gips_published": pub["peak_gips"],
+                "achieved_gips": m.achieved_gips(),
+                "achieved_gips_published": pub["achieved_gips"],
+                "intensity": m.intensity_performance(),
+                "intensity_published": pub["intensity"],
+                "bound": m.bound(),
+            })
+    return out
+
+
+def bench() -> List[str]:
+    """CSV lines: name,us_per_call,derived."""
+    t0 = time.perf_counter()
+    rs = rows()
+    n = 200
+    for _ in range(n):
+        rs = rows()
+    us = (time.perf_counter() - t0) / (n + 1) * 1e6
+    lines = []
+    for r in rs:
+        err = abs(r["achieved_gips"] - r["achieved_gips_published"]) \
+            / r["achieved_gips_published"]
+        lines.append(
+            f"paper/{r['table']}/{r['gpu']},{us:.1f},"
+            f"achieved={r['achieved_gips']:.3f};published="
+            f"{r['achieved_gips_published']:.3f};rel_err={err:.4f};"
+            f"bound={r['bound']}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

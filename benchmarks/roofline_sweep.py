@@ -1,0 +1,71 @@
+"""Aggregates the dry-run JSON records into the EXPERIMENTS.md roofline
+table: per (arch x shape x mesh) the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness, modeled MFU, memory fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+V5E_HBM_GIB = 16.0
+
+
+def load_records() -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table_rows(recs=None) -> List[Dict]:
+    rows = []
+    for r in recs if recs is not None else load_records():
+        if "skipped" in r or "error" in r:
+            rows.append({"cell": r.get("cell", "?"),
+                         "status": r.get("skipped", r.get("error"))})
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]
+        census = r["census"]
+        fits = mem["device_total_bytes"] / 2 ** 30 <= V5E_HBM_GIB
+        rows.append({
+            "cell": r["cell"],
+            "status": "ok",
+            "devices": rl["devices"],
+            "compute_ms": rl["compute_s"] * 1e3,
+            "memory_ms": rl["memory_s"] * 1e3,
+            "collective_ms": rl["collective_s"] * 1e3,
+            "dominant": rl["dominant"],
+            "modeled_ms": rl["modeled_time_s"] * 1e3,
+            "useful_flops": rl.get("useful_flops_ratio"),
+            "mfu": rl["mfu_vs_peak"],
+            "dev_gib": mem["device_total_bytes"] / 2 ** 30,
+            "fits_v5e": fits,
+            "mxu_pad_eff": r["irm"]["mxu_padding_efficiency"],
+            "collective_gb": census["collective_wire_bytes"] / 1e9,
+        })
+    return rows
+
+
+def bench() -> List[str]:
+    lines = []
+    for row in table_rows():
+        if row.get("status") != "ok":
+            lines.append(f"roofline/{row['cell']},0,{row['status']}")
+            continue
+        lines.append(
+            f"roofline/{row['cell']},{row['modeled_ms']*1e3:.0f},"
+            f"dominant={row['dominant']};mfu={row['mfu']*100:.1f}%;"
+            f"useful={row['useful_flops'] or 0:.2f};"
+            f"dev_GiB={row['dev_gib']:.1f};fits={row['fits_v5e']}")
+    if not lines:
+        lines = ["roofline/none,0,no dryrun records — run repro.launch.dryrun"]
+    return lines
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

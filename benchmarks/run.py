@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV lines for: Tables 1-2 (paper_tables), Figs 5-7 (paper_rooflines),
+# BabelStream + gpumembench (section 6.2), the roofline sweep over every
+# (arch x shape x mesh) dry-run cell, and the runnable train/serve micro
+# -benchmarks.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (babelstream, kernel_adjusted, membench,
+                            paper_rooflines, paper_tables, roofline_sweep,
+                            serve_bench, train_bench)
+    modules = [
+        ("paper_tables", paper_tables),
+        ("paper_rooflines", paper_rooflines),
+        ("babelstream", babelstream),
+        ("membench", membench),
+        ("roofline_sweep", roofline_sweep),
+        ("kernel_adjusted", kernel_adjusted),
+        ("train_bench", train_bench),
+        ("serve_bench", serve_bench),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for line in mod.bench():
+                print(line)
+        except Exception as e:                        # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    sys.stdout.flush()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,27 @@
+"""Serving micro-benchmark: batched decode throughput at smoke scale (the
+decode_32k cells' runnable counterpart)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from repro.configs import get
+from repro.models import get_model
+from repro.serve.engine import ServeConfig, ServingEngine
+
+
+def bench() -> List[str]:
+    cfg = get("granite-8b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, ServeConfig(max_batch=4, max_seq=128))
+    stats = eng.benchmark_decode(batch=4, seq=128, steps=8)
+    return [f"serve/granite-8b-reduced-decode,{stats['s_per_step']*1e6:.0f},"
+            f"tokens_per_s={stats['tokens_per_s']:.1f}"]
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

@@ -1,0 +1,33 @@
+"""End-to-end CPU training micro-run (loss must decrease) — the runnable
+counterpart of the train_4k cells, at smoke scale."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import get
+from repro.data.pipeline import DataConfig
+from repro.models import get_model
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import linear_warmup
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def bench() -> List[str]:
+    cfg = get("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    tr = Trainer(model, AdamWConfig(lr=linear_warmup(3e-3, 10)),
+                 data, TrainerConfig(steps=30, checkpoint_dir=None,
+                                     log_every=1000))
+    out = tr.run()
+    us = out["wall_s"] / 30 * 1e6
+    improved = out["last_loss"] < out["first_loss"]
+    return [f"train/qwen2-0.5b-reduced,{us:.0f},"
+            f"first={out['first_loss']:.3f};last={out['last_loss']:.3f};"
+            f"improved={improved}"]
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

@@ -1,0 +1,54 @@
+"""Profile any assigned architecture x shape into an instruction-roofline
+report + IRM plot, without hardware (AOT dry-run on placeholder devices).
+
+Run:  PYTHONPATH=src python examples/profile_model.py --arch granite-8b \
+          --shape train_4k [--multi-pod] [--plot out.png]
+
+NOTE: spawns the 512-device dry-run in-process; run it as your first jax
+use in the process (it sets XLA_FLAGS before importing jax).
+"""
+import argparse
+import importlib
+import json
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plot", default="")
+    args = ap.parse_args()
+
+    # dryrun sets XLA_FLAGS at import time — must come before any jax init
+    from repro.launch import dryrun
+    rec = dryrun.run_cell(args.arch, args.shape, args.multi_pod)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k in ("cell", "roofline", "irm", "memory",
+                               "build_info", "skipped")},
+                     indent=2, default=str))
+
+    if args.plot and "irm" not in rec.get("skipped", "irm"):
+        from repro.core.hardware import TPU_V5E
+        from repro.core.irm import tpu_irm
+        from repro.core.plotting import plot_irm
+        from repro.core.tpu_model import TpuInstructionProfile
+        irm = rec["irm"]
+        prof = TpuInstructionProfile(
+            name=rec["cell"], hw=TPU_V5E, runtime_s=irm["runtime_s"],
+            runtime_is_modeled=True,
+            mxu_issues=rec["census"]["mxu_issues"],
+            vpu_issues=rec["census"]["vpu_issues"],
+            scalar_ops=rec["census"]["scalar_ops"],
+            hbm_bytes=rec["census"]["hbm_bytes"],
+            mxu_flops=rec["census"]["mxu_flops"],
+            vpu_flops=rec["census"]["vpu_flops"],
+            mxu_flops_padded=rec["census"]["mxu_issues"] * 2 * 128 ** 3)
+        plot_irm(tpu_irm([prof], title=rec["cell"]), args.plot)
+        print(f"wrote {args.plot}")
+
+
+if __name__ == "__main__":
+    main()

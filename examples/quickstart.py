@@ -1,0 +1,51 @@
+"""Quickstart: the paper's workflow end-to-end in 60 lines.
+
+1. Reproduce a row of the paper's Table 2 from raw rocProf counters.
+2. Profile a jitted JAX function with the XLA instruction census (the
+   "rocProf for XLA") and print its instruction roofline record.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import paper_data
+from repro.core.hardware import TPU_V5E
+from repro.core.hlo_counters import census_from_compiled
+from repro.core.roofline import roofline_terms
+from repro.core.tpu_model import profile_from_census
+
+# --- 1. paper Table 2, MI100 row -------------------------------------------
+m = paper_data.TWEAC_MI100
+print("== Leinhauser et al. Table 2 (TWEAC ComputeCurrent, MI100) ==")
+print(f"  peak GIPS (Eq.3):      {m.peak_gips():8.2f}   (published 180.24)")
+print(f"  achieved GIPS (Eq.4):  {m.achieved_gips():8.3f}   (published 4.993)")
+print(f"  intensity (Eq.2):      {m.intensity_performance():8.3f}"
+      "   (published 0.408)")
+print(f"  bound: {m.bound()}")
+
+# --- 2. same methodology, applied to a compiled XLA step --------------------
+def step(x, w1, w2):
+    h = jax.nn.gelu(x @ w1)
+    return (h @ w2).sum()
+
+B, D, F = 256, 512, 2048
+args = [jax.ShapeDtypeStruct(s, jnp.bfloat16)
+        for s in [(B, D), (D, F), (F, D)]]
+compiled = jax.jit(step).lower(*args).compile()
+
+census = census_from_compiled(compiled)
+terms = roofline_terms("quickstart_mlp", census, TPU_V5E, n_devices=1)
+prof = profile_from_census("quickstart_mlp", census, TPU_V5E,
+                           runtime_s=terms.modeled_time_s)
+
+print("\n== instruction roofline of the compiled MLP step (TPU v5e model) ==")
+print(f"  MXU flops: {census.mxu_flops/1e9:.2f} GFLOP   "
+      f"issues: {census.mxu_issues:.0f} "
+      f"(padding eff {prof.mxu_padding_efficiency*100:.0f}%)")
+print(f"  VPU issues: {census.vpu_issues:.0f}   HBM bytes: "
+      f"{census.hbm_bytes/1e6:.1f} MB")
+print("  " + terms.summary())
+print(f"  achieved MXU GIPS {prof.achieved_mxu_gips:.4f} "
+      f"(peak {prof.peak_mxu_gips:.4f}) | intensity "
+      f"{prof.mxu_intensity:.2e} inst/B")

@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES, ArchConfig, ShapeConfig, get, register, registry,
+    shape_applicable)

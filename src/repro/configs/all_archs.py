@@ -1,0 +1,18 @@
+"""Imports every assigned architecture config (side effect: registration)."""
+from repro.configs import (  # noqa: F401
+    falcon_mamba_7b, granite_20b, granite_8b, grok_1_314b,
+    llama4_scout_17b_a16e, phi4_mini_3_8b, qwen2_0_5b, qwen2_vl_72b,
+    whisper_large_v3, zamba2_7b)
+
+ALL_ARCHS = [
+    "llama4-scout-17b-a16e",
+    "grok-1-314b",
+    "zamba2-7b",
+    "granite-8b",
+    "granite-20b",
+    "qwen2-0.5b",
+    "phi4-mini-3.8b",
+    "whisper-large-v3",
+    "qwen2-vl-72b",
+    "falcon-mamba-7b",
+]

@@ -1,0 +1,21 @@
+"""qwen2-vl-72b — VLM backbone with M-RoPE.  [arXiv:2409.12191; hf]
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+Backbone only: the vision frontend is a STUB — ``input_specs()`` provides
+precomputed patch/token embeddings plus (3, batch, seq) M-RoPE position ids
+(temporal / height / width sections over the rotary half-dim).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    embed_inputs=False,
+    mrope_sections=(16, 24, 24),     # sums to head_dim/2 = 64
+    qkv_bias=True,
+))

@@ -1,0 +1,12 @@
+"""repro.core — the paper's contribution: instruction roofline models built
+from constrained profiler interfaces (rocProf counters on AMD; AOT
+cost/HLO-census on XLA/TPU)."""
+from repro.core import hardware, paper_data, paper_model  # noqa: F401
+from repro.core.hardware import HardwareSpec, get as get_hardware  # noqa: F401
+from repro.core.hlo_counters import (  # noqa: F401
+    Census, census_from_compiled, census_from_text)
+from repro.core.irm import gpu_irm, tpu_irm  # noqa: F401
+from repro.core.paper_model import KernelMeasurement  # noqa: F401
+from repro.core.roofline import RooflineTerms, roofline_terms  # noqa: F401
+from repro.core.tpu_model import (  # noqa: F401
+    TpuInstructionProfile, profile_from_census)

@@ -1,0 +1,195 @@
+"""Hardware specification registry.
+
+The paper (Leinhauser et al. 2021) builds instruction roofline models from a
+small set of per-device constants: compute units, schedulers per unit, IPC,
+frequency, native execution width (warp=32 / wavefront=64), and an
+*empirically measured* memory bandwidth (BabelStream) where the profiler
+cannot report one.  We keep exactly those fields for the paper's three GPUs
+(used to reproduce Tables 1-2 and Figs 4-7) and extend the spec with the
+fields the TPU instantiation needs: MXU/VPU issue geometry, HBM bandwidth and
+ICI link bandwidth for the collective ceiling.
+
+All TPU numbers are for a single chip.  Modeling assumptions (documented in
+DESIGN.md section 2):
+  * v5e: 197 TFLOP/s bf16 == 4 MXUs x (128x128 MACs x 2 flop) x 1.5023 GHz.
+  * VPU: 4 ALU sub-units x (8x128)-lane vregs (the GCN "4 SIMDs per CU" of
+    Eq. 1 maps onto this issue model).
+  * ICI: ~50 GB/s per link per direction (prompt-specified planning number).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Constants needed to build instruction rooflines for one device."""
+
+    name: str
+    vendor: str                       # "amd" | "nvidia" | "google"
+    # --- instruction ceiling (paper Eq. 3) -------------------------------
+    compute_units: int                # CUs (AMD) / SMs (NVIDIA) / cores (TPU)
+    schedulers_per_cu: int            # wavefront/warp schedulers per CU/SM
+    ipc: int                          # instructions issued per cycle/scheduler
+    frequency_ghz: float
+    # --- native execution granularity (paper Eq. 4) ----------------------
+    lanes_per_issue: int              # wavefront=64, warp=32, TPU vreg=1024
+    # --- memory ceiling ---------------------------------------------------
+    hbm_bw_theoretical_gbs: float
+    hbm_bw_measured_gbs: Optional[float] = None  # BabelStream-style measured
+    # --- compute ceiling in FLOP terms (TPU instantiation) ----------------
+    peak_flops_bf16: Optional[float] = None      # per chip, FLOP/s
+    peak_flops_fp32: Optional[float] = None
+    # --- MXU/VPU issue geometry (TPU only) --------------------------------
+    mxu_count: int = 0                # systolic arrays per chip
+    mxu_dim: int = 128                # MXU is mxu_dim x mxu_dim
+    vpu_alus: int = 4                 # ALU sub-units per VPU
+    vpu_sublanes: int = 8
+    vpu_lanes: int = 128
+    # --- interconnect (collective ceiling) --------------------------------
+    ici_links: int = 0                # links per chip (torus degree)
+    ici_bw_per_link_gbs: float = 0.0  # per direction
+    hbm_gib: float = 0.0              # device memory capacity
+
+    # -- paper Eq. 3: GIPS_peak = CU x WFS/CU x IPC x freq ------------------
+    def peak_gips(self) -> float:
+        return (self.compute_units * self.schedulers_per_cu * self.ipc
+                * self.frequency_ghz)
+
+    # -- memory ceiling used for roofline plots ----------------------------
+    def memory_ceiling_gbs(self) -> float:
+        if self.hbm_bw_measured_gbs is not None:
+            return self.hbm_bw_measured_gbs
+        return self.hbm_bw_theoretical_gbs
+
+    # -- TPU-only derived peaks --------------------------------------------
+    def vpu_lanes_per_issue(self) -> int:
+        return self.vpu_sublanes * self.vpu_lanes  # one vreg
+
+    def peak_mxu_issues_per_s(self) -> float:
+        """One MXU 'issue' = a full 128-deep systolic pass producing a
+        mxu_dim x mxu_dim output tile (takes mxu_dim cycles)."""
+        if self.mxu_count == 0:
+            return 0.0
+        return self.mxu_count * self.frequency_ghz * 1e9 / self.mxu_dim
+
+    def peak_vpu_issues_per_s(self) -> float:
+        """One VPU issue = one vreg-wide (sublanes x lanes) ALU op."""
+        return self.vpu_alus * self.frequency_ghz * 1e9
+
+    def flops_per_mxu_issue(self) -> float:
+        # output tile (d x d) x contraction depth (d) x 2 (mul+add)
+        return 2.0 * self.mxu_dim ** 3
+
+    def mxu_flops_consistency(self) -> float:
+        """peak bf16 FLOP/s implied by the issue model; should match
+        peak_flops_bf16 (asserted in tests)."""
+        return self.peak_mxu_issues_per_s() * self.flops_per_mxu_issue()
+
+
+# ---------------------------------------------------------------------------
+# Registry.  AMD/NVIDIA entries hold the exact constants the paper uses in
+# Tables 1-2 (CU/SM count, schedulers, IPC, frequency) plus the BabelStream
+# bandwidths from section 6.2.
+# ---------------------------------------------------------------------------
+
+MI60 = HardwareSpec(
+    name="AMD Radeon Instinct MI60",
+    vendor="amd",
+    compute_units=64,
+    schedulers_per_cu=1,
+    ipc=1,
+    frequency_ghz=1.800,
+    lanes_per_issue=64,               # wavefront
+    hbm_bw_theoretical_gbs=1000.0,
+    # BabelStream copy: 808,975.476 MB/s (paper section 6.2)
+    hbm_bw_measured_gbs=808.975476,
+    hbm_gib=32.0,
+)
+
+MI100 = HardwareSpec(
+    name="AMD Instinct MI100",
+    vendor="amd",
+    compute_units=120,
+    schedulers_per_cu=1,
+    ipc=1,
+    frequency_ghz=1.502,
+    lanes_per_issue=64,
+    hbm_bw_theoretical_gbs=1200.0,
+    # BabelStream copy: 933,355.781 MB/s (paper section 6.2)
+    hbm_bw_measured_gbs=933.355781,
+    hbm_gib=32.0,
+)
+
+V100 = HardwareSpec(
+    name="NVIDIA Tesla V100",
+    vendor="nvidia",
+    compute_units=80,                 # SMs
+    schedulers_per_cu=4,              # warp schedulers per SM
+    ipc=1,
+    frequency_ghz=1.530,
+    lanes_per_issue=32,               # warp
+    hbm_bw_theoretical_gbs=900.0,
+    # paper: achieved >99% of theoretical via Nsight Compute
+    hbm_bw_measured_gbs=None,
+    hbm_gib=16.0,
+)
+
+# --- TPU targets -----------------------------------------------------------
+
+TPU_V5E = HardwareSpec(
+    name="TPU v5e",
+    vendor="google",
+    compute_units=1,                  # TensorCores per chip
+    schedulers_per_cu=1,
+    ipc=1,
+    frequency_ghz=1.5023,             # chosen so 4 MXUs give 197 TFLOP/s bf16
+    lanes_per_issue=1024,             # one (8,128) vreg
+    hbm_bw_theoretical_gbs=819.0,
+    hbm_bw_measured_gbs=None,
+    peak_flops_bf16=197e12,
+    peak_flops_fp32=49.25e12,
+    mxu_count=4,
+    mxu_dim=128,
+    vpu_alus=4,
+    vpu_sublanes=8,
+    vpu_lanes=128,
+    ici_links=4,                      # 2D torus: +-x, +-y
+    ici_bw_per_link_gbs=50.0,
+    hbm_gib=16.0,
+)
+
+TPU_V5P = HardwareSpec(
+    name="TPU v5p",
+    vendor="google",
+    compute_units=2,
+    schedulers_per_cu=1,
+    ipc=1,
+    frequency_ghz=1.75,
+    lanes_per_issue=1024,
+    hbm_bw_theoretical_gbs=2765.0,
+    peak_flops_bf16=459e12,
+    peak_flops_fp32=114.75e12,
+    mxu_count=8,                      # 4 per TensorCore x 2
+    mxu_dim=128,
+    vpu_alus=8,
+    ici_links=6,                      # 3D torus
+    ici_bw_per_link_gbs=100.0,
+    hbm_gib=95.0,
+)
+
+REGISTRY: Dict[str, HardwareSpec] = {
+    "mi60": MI60,
+    "mi100": MI100,
+    "v100": V100,
+    "tpu_v5e": TPU_V5E,
+    "tpu_v5p": TPU_V5P,
+}
+
+
+def get(name: str) -> HardwareSpec:
+    key = name.lower().replace("-", "_")
+    if key not in REGISTRY:
+        raise KeyError(f"unknown hardware {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[key]

@@ -1,0 +1,52 @@
+"""Log-log instruction roofline plots (paper Figs 4-7 style).
+
+Matplotlib is optional at import time so headless test environments without
+it still import `repro.core`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.core.irm import InstructionRooflineModel
+
+
+def plot_irm(model: InstructionRooflineModel, path: str,
+             x_range: Optional[tuple] = None) -> str:
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    xs_pts = [p.intensity for p in model.points if p.intensity > 0]
+    if x_range is None:
+        lo = min(xs_pts) / 10 if xs_pts else 1e-3
+        hi = max(xs_pts) * 10 if xs_pts else 1e2
+        knee = model.knee()
+        lo = min(lo, knee / 10)
+        hi = max(hi, knee * 10)
+        x_range = (lo, hi)
+
+    fig, ax = plt.subplots(figsize=(7, 5))
+    n = 200
+    xs = [x_range[0] * (x_range[1] / x_range[0]) ** (i / (n - 1))
+          for i in range(n)]
+    for c in model.ceilings:
+        ys = [c.y_at(x) for x in xs]
+        ax.plot(xs, ys, lw=1.6, label=c.label)
+    markers = {"HBM": "o", "MXU": "s", "VPU": "^", "L1": "v", "L2": "d"}
+    for p in model.points:
+        if p.intensity <= 0 or p.gips <= 0:
+            continue
+        ax.plot([p.intensity], [p.gips],
+                markers.get(p.series, "o"), ms=8, label=p.label)
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel("Instruction intensity (instructions / byte)")
+    ax.set_ylabel("Performance (GIPS)")
+    ax.set_title(model.title)
+    ax.grid(True, which="both", alpha=0.3)
+    ax.legend(fontsize=7, loc="lower right")
+    fig.tight_layout()
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return path

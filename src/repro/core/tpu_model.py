@@ -1,0 +1,137 @@
+"""TPU instruction-issue model — the Eq. 1/3/4 analogue for TPU chips.
+
+The paper normalizes raw counter values to the machine's native execution
+granularity (AMD: SQ_INSTS_VALU x 4 SIMDs, divided by 64-lane wavefronts).
+A TPU TensorCore has two instruction-bearing unit classes:
+
+  * the MXU(s): systolic 128x128 arrays; one "issue" here = one full
+    contraction pass (128-deep) producing a 128x128 output tile;
+  * the VPU: (8,128)-lane vector registers, ``vpu_alus`` ALU sub-units.
+
+``hlo_counters`` produces ceil-tiled issue counts per class (padding-aware,
+like the paper's transaction counts).  This module turns those into the
+paper's headline quantities: peak GIPS per unit class, achieved GIPS at a
+given runtime (measured or roofline-modeled), and instruction intensity in
+(issue-scaled) instructions per byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.hardware import HardwareSpec
+from repro.core.hlo_counters import Census
+
+
+@dataclasses.dataclass
+class TpuInstructionProfile:
+    """The TPU 'Table 1 row' for one compiled step."""
+
+    name: str
+    hw: HardwareSpec
+    runtime_s: float                  # measured, or roofline-modeled
+    runtime_is_modeled: bool
+    # issue counts (per device)
+    mxu_issues: float
+    vpu_issues: float
+    scalar_ops: float
+    # traffic
+    hbm_bytes: float
+    # raw flop context
+    mxu_flops: float
+    vpu_flops: float
+    mxu_flops_padded: float
+
+    # --- Eq. 3 analogues ---------------------------------------------------
+    @property
+    def peak_mxu_gips(self) -> float:
+        return self.hw.peak_mxu_issues_per_s() / 1e9
+
+    @property
+    def peak_vpu_gips(self) -> float:
+        return self.hw.peak_vpu_issues_per_s() / 1e9
+
+    # --- Eq. 4 analogues ---------------------------------------------------
+    @property
+    def achieved_mxu_gips(self) -> float:
+        return self.mxu_issues / (1e9 * self.runtime_s)
+
+    @property
+    def achieved_vpu_gips(self) -> float:
+        return self.vpu_issues / (1e9 * self.runtime_s)
+
+    @property
+    def achieved_total_gips(self) -> float:
+        insts = self.mxu_issues + self.vpu_issues + self.scalar_ops
+        return insts / (1e9 * self.runtime_s)
+
+    # --- Eq. 2 analogue (runtime-free intensity, inst/byte) -----------------
+    @property
+    def mxu_intensity(self) -> float:
+        return self.mxu_issues / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    @property
+    def vpu_intensity(self) -> float:
+        return self.vpu_issues / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    @property
+    def total_intensity(self) -> float:
+        insts = self.mxu_issues + self.vpu_issues + self.scalar_ops
+        return insts / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    # --- padding efficiency: the IRM-only insight ---------------------------
+    @property
+    def mxu_padding_efficiency(self) -> float:
+        """useful MXU flops / flops implied by issued passes.  < 1.0 means
+        tiles are padded (e.g. head_dim 64 wastes half of each 128-deep
+        pass) — invisible on a FLOP roofline, visible on this one."""
+        if not self.mxu_flops_padded:
+            return 1.0
+        return self.mxu_flops / self.mxu_flops_padded
+
+    @property
+    def mxu_utilization(self) -> float:
+        return self.achieved_mxu_gips / self.peak_mxu_gips
+
+    @property
+    def vpu_utilization(self) -> float:
+        return self.achieved_vpu_gips / self.peak_vpu_gips
+
+    def dominant_unit(self) -> str:
+        return ("mxu" if self.mxu_utilization >= self.vpu_utilization
+                else "vpu")
+
+    def table_row(self) -> dict:
+        return {
+            "name": self.name,
+            "hw": self.hw.name,
+            "runtime_s": self.runtime_s,
+            "runtime_modeled": self.runtime_is_modeled,
+            "peak_mxu_gips": self.peak_mxu_gips,
+            "peak_vpu_gips": self.peak_vpu_gips,
+            "achieved_mxu_gips": self.achieved_mxu_gips,
+            "achieved_vpu_gips": self.achieved_vpu_gips,
+            "mxu_intensity_inst_per_byte": self.mxu_intensity,
+            "vpu_intensity_inst_per_byte": self.vpu_intensity,
+            "mxu_padding_efficiency": self.mxu_padding_efficiency,
+            "mxu_utilization": self.mxu_utilization,
+            "vpu_utilization": self.vpu_utilization,
+            "dominant_unit": self.dominant_unit(),
+        }
+
+
+def profile_from_census(name: str, census: Census, hw: HardwareSpec,
+                        runtime_s: float,
+                        runtime_is_modeled: bool = True
+                        ) -> TpuInstructionProfile:
+    return TpuInstructionProfile(
+        name=name, hw=hw, runtime_s=runtime_s,
+        runtime_is_modeled=runtime_is_modeled,
+        mxu_issues=census.mxu_issues,
+        vpu_issues=census.vpu_issues,
+        scalar_ops=census.scalar_ops,
+        hbm_bytes=census.hbm_bytes,
+        mxu_flops=census.mxu_flops,
+        vpu_flops=census.vpu_flops,
+        mxu_flops_padded=census.mxu_flops_padded,
+    )

@@ -1,0 +1,123 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+TPU adaptation (vs the CUDA flash-attention algorithm):
+
+  * grid = (B*H, num_q_blocks, num_kv_blocks) — the kv dimension is the
+    MINOR grid axis, so for a fixed q block the kernel visits kv blocks
+    sequentially (TPU grids execute in order on a core) and the online
+    softmax state lives in VMEM scratch across those grid steps.
+  * block shapes are MXU/VPU aligned: q/k/v tiles (block_q x d) with d
+    padded to 128 lanes; the score tile (block_q x block_kv) hits the MXU
+    as a [bq, d] x [d, bkv] pass.
+  * causal skipping: fully-masked blocks are skipped with ``pl.when``
+    (no FLOPs issued), the diagonal block applies the triangular mask —
+    mirroring the STATIC triangular enumeration of the jnp reference.
+  * VMEM budget: (block_q + 2*block_kv) * d * 4B + block_q*block_kv*4B
+    — default 512x512xd=128 fits comfortably in the ~16 MiB v5e VMEM.
+
+The backward pass uses the custom-VJP jnp implementation
+(repro/models/flash.py) — on-TPU backward kernels would follow the same
+two-pass structure.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_kv: int,
+            num_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # block is live iff some q position >= some k position
+        run = kj * block_kv <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kpos = kj * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = 512,
+                        block_kv: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q (B, S, H, D); k, v (B, T, H, D) with kv heads already repeated.
+    Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    assert S % bq == 0 and T % bkv == 0, (S, bq, T, bkv)
+    scale = 1.0 / math.sqrt(D)
+
+    # (B*H, S, D) layout: batch*head major, MXU-aligned minor dims
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+
+    grid = (B * H, S // bq, T // bkv)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=bq, block_kv=bkv,
+        num_kv=T // bkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),      # running row max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running row sum
+            pltpu.VMEM((bq, D), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the Pallas flash kernel: the direct softmax attention
+(repro.models.attention.direct_attention) and the chunked custom-VJP flash
+(repro.models.flash.flash_attention_ref) — all three must agree."""
+from repro.models.attention import direct_attention  # noqa: F401
+from repro.models.flash import flash_attention_ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Jitted wrapper for the Pallas selective scan; backward falls back to the
+jnp sequential scan's autodiff (same math)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssm_scan import scan as _scan
+from repro.models.ssm import mamba1_scan
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(x, dt, A, Bc, Cc, block_d: int = 256, chunk: int = 256,
+                   interpret=None):
+    return _scan.selective_scan_fwd(
+        x, dt, A, Bc, Cc, block_d=block_d, chunk=chunk,
+        interpret=_auto_interpret(interpret))

@@ -1,0 +1,2 @@
+"""Oracle: the model's own sequential-time scan (repro.models.ssm)."""
+from repro.models.ssm import mamba1_scan  # noqa: F401

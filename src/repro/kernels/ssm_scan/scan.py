@@ -1,0 +1,107 @@
+"""Mamba1 selective scan as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: the state h (bd, N) lives in VMEM
+scratch for the WHOLE sequence while x/dt/B/C stream through in chunks —
+HBM traffic is exactly inputs + outputs (the jnp scan pays h in/out + decay
+materialization per step: ~60x more).
+
+  grid = (B, d_in/bd, S/chunk)   — chunk is the minor (sequential) axis, so
+                                   the scratch state carries across chunks
+  blocks: x, dt (1, chunk, bd); B, C (1, chunk, N); A (bd, N)
+  per-step work is VPU-shaped: (bd, N) elementwise + an N-reduction
+
+d_in is the LANE dim of x blocks (bd multiple of 128); N=16 fits a vreg
+sublane group.  VMEM: (chunk x bd)*2 + (chunk x N)*2 + (bd x N) floats —
+~600 KiB at chunk=256, bd=256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_scr, *,
+            chunk: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)
+    bb = b_ref[0].astype(jnp.float32)         # (chunk, N)
+    cc = c_ref[0].astype(jnp.float32)
+    A = a_ref[...].astype(jnp.float32)        # (bd, N)
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = jax.lax.dynamic_index_in_dim(dt, t, 0, False)   # (bd,)
+        x_t = jax.lax.dynamic_index_in_dim(x, t, 0, False)
+        b_t = jax.lax.dynamic_index_in_dim(bb, t, 0, False)    # (N,)
+        c_t = jax.lax.dynamic_index_in_dim(cc, t, 0, False)
+        dA = jnp.exp(dt_t[:, None] * A)                        # (bd, N)
+        h = dA * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=1)                # (bd,)
+        y = jax.lax.dynamic_update_index_in_dim(y, y_t, t, 0)
+        return h, y
+
+    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_scr[...], y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _flush():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_fwd(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bc: jax.Array, Cc: jax.Array, *,
+                       block_d: int = 256, chunk: int = 256,
+                       interpret: bool = False):
+    """x, dt (B, S, d_in); A (d_in, N); Bc, Cc (B, S, N).
+    Returns (y (B, S, d_in), h_final (B, d_in, N))."""
+    B, S, d_in = x.shape
+    N = A.shape[1]
+    bd = min(block_d, d_in)
+    c = min(chunk, S)
+    assert d_in % bd == 0 and S % c == 0, (d_in, bd, S, c)
+    grid = (B, d_in // bd, S // c)
+
+    kernel = functools.partial(_kernel, chunk=c, num_chunks=S // c)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, bd), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, c, bd), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, c, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((bd, N), lambda b, di, ci: (di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, bd), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, bd, N), lambda b, di, ci: (b, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, d_in), x.dtype),
+            jax.ShapeDtypeStruct((B, d_in, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bc, Cc, A)
+    return y, h_fin
+
+
+def analytic_hbm_bytes(B: int, S: int, d_in: int, N: int,
+                       dtype_bytes: int = 4) -> float:
+    """HBM traffic model for one forward invocation: stream x, dt, y
+    (B,S,d_in) + B, C (B,S,N) + A + h out — the quantity substituted into
+    the kernel-adjusted roofline."""
+    return float(B * S * (3 * d_in + 2 * N) * dtype_bytes
+                 + d_in * N * 4 + B * d_in * N * 4)

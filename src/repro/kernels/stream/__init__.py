@@ -1,0 +1,2 @@
+from repro.kernels.stream.ops import (  # noqa: F401
+    stream_add, stream_copy, stream_dot, stream_mul, stream_triad)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the BabelStream-TPU kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def copy(a):
+    return a + 0
+
+
+def mul(c, scalar: float = 0.4):
+    return c * scalar
+
+
+def add(a, b):
+    return a + b
+
+
+def triad(b, c, scalar: float = 0.4):
+    return b + scalar * c
+
+
+def dot(a, b):
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))

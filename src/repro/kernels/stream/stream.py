@@ -1,0 +1,142 @@
+"""BabelStream-TPU: the five STREAM kernels as Pallas TPU kernels.
+
+The paper uses BabelStream's HIP implementation to measure each AMD GPU's
+*attainable* memory bandwidth (its copy result becomes the IRM memory
+ceiling, section 6.2).  This is the TPU port: each kernel streams HBM-resident
+arrays through VMEM in (8, LANE*k)-aligned blocks via ``pl.pallas_call`` with
+explicit BlockSpecs.
+
+  copy : c[i] = a[i]
+  mul  : b[i] = s * c[i]
+  add  : c[i] = a[i] + b[i]
+  triad: a[i] = b[i] + s * c[i]
+  dot  : sum(a[i] * b[i])   (grid-sequential accumulation into SMEM-like
+                             (1,1) VMEM accumulator — TPU grids execute
+                             sequentially per core, so this is race-free)
+
+Arrays are 2-D (rows, cols): rows multiple of 8 sublanes, cols multiple of
+128 lanes.  ``BLOCK_ROWS`` x cols is the VMEM working set per grid step —
+sized well under the ~16 MiB v5e VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256          # x 512 lanes x 4B = 512 KiB per operand block
+
+
+def _grid(shape, block_rows):
+    rows = shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    return (rows // block_rows,)
+
+
+def _bspec(block_rows, cols):
+    return pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+
+
+# --- kernel bodies ----------------------------------------------------------
+
+def _copy_kernel(a_ref, c_ref):
+    c_ref[...] = a_ref[...]
+
+
+def _mul_kernel(c_ref, b_ref, *, scalar):
+    b_ref[...] = c_ref[...] * scalar
+
+
+def _add_kernel(a_ref, b_ref, c_ref):
+    c_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(b_ref, c_ref, a_ref, *, scalar):
+    a_ref[...] = b_ref[...] + scalar * c_ref[...]
+
+
+def _dot_kernel(a_ref, b_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    part = jnp.sum(a_ref[...].astype(jnp.float32)
+                   * b_ref[...].astype(jnp.float32))
+    acc_ref[0, 0] += part
+
+
+# --- pallas_call wrappers ----------------------------------------------------
+
+def copy(a: jax.Array, *, block_rows: int = BLOCK_ROWS,
+         interpret: bool = False) -> jax.Array:
+    rows, cols = a.shape
+    br = min(block_rows, rows)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=_grid(a.shape, br),
+        in_specs=[_bspec(br, cols)],
+        out_specs=_bspec(br, cols),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a)
+
+
+def mul(c: jax.Array, scalar: float = 0.4, *,
+        block_rows: int = BLOCK_ROWS, interpret: bool = False) -> jax.Array:
+    rows, cols = c.shape
+    br = min(block_rows, rows)
+    return pl.pallas_call(
+        functools.partial(_mul_kernel, scalar=scalar),
+        grid=_grid(c.shape, br),
+        in_specs=[_bspec(br, cols)],
+        out_specs=_bspec(br, cols),
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=interpret,
+    )(c)
+
+
+def add(a: jax.Array, b: jax.Array, *, block_rows: int = BLOCK_ROWS,
+        interpret: bool = False) -> jax.Array:
+    rows, cols = a.shape
+    br = min(block_rows, rows)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=_grid(a.shape, br),
+        in_specs=[_bspec(br, cols), _bspec(br, cols)],
+        out_specs=_bspec(br, cols),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def triad(b: jax.Array, c: jax.Array, scalar: float = 0.4, *,
+          block_rows: int = BLOCK_ROWS, interpret: bool = False) -> jax.Array:
+    rows, cols = b.shape
+    br = min(block_rows, rows)
+    return pl.pallas_call(
+        functools.partial(_triad_kernel, scalar=scalar),
+        grid=_grid(b.shape, br),
+        in_specs=[_bspec(br, cols), _bspec(br, cols)],
+        out_specs=_bspec(br, cols),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=interpret,
+    )(b, c)
+
+
+def dot(a: jax.Array, b: jax.Array, *, block_rows: int = BLOCK_ROWS,
+        interpret: bool = False) -> jax.Array:
+    rows, cols = a.shape
+    br = min(block_rows, rows)
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=_grid(a.shape, br),
+        in_specs=[_bspec(br, cols), _bspec(br, cols)],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[0, 0]

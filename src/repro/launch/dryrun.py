@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before any jax import: jax locks the device
+# count on first init, and the production meshes below need 512 placeholder
+# host devices (2 pods x 16 x 16).  Do not set this anywhere global — smoke
+# tests and benches must see the single real CPU device.
+
+"""Multi-pod dry-run driver.
+
+For every live (architecture x input-shape) cell this lowers + compiles the
+real step function (train_step with optimizer, or serve prefill/decode) for
+the single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, prints
+``memory_analysis()`` / ``cost_analysis()``, runs the HLO instruction census
+and emits the roofline record (EXPERIMENTS.md sections Dry-run / Roofline read
+these JSON files).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--resume]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import SHAPES, ShapeConfig, shape_applicable
+from repro.configs.all_archs import ALL_ARCHS
+from repro.core.hardware import TPU_V5E
+from repro.dist.sharding import MeshRules, use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.profiler.session import profile_compiled
+from repro.train.train_step import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+# params above this per-TP-shard size keep FSDP sharding even for serving
+_SERVE_FSDP_BYTES = 8e9
+
+
+def _params_bytes(model: Model) -> float:
+    total = 0
+    for leaf in jax.tree.leaves(model.abstract_params()):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return float(total)
+
+
+def rules_for(model: Model, shape: ShapeConfig,
+              multi_pod: bool) -> MeshRules:
+    pod = ("pod",) if multi_pod else ()
+    if shape.kind == "train" or shape.kind == "prefill":
+        return MeshRules(batch_axes=pod + ("data",),
+                         fsdp_axes=pod + ("data",),
+                         cache_seq_axes=("model",),
+                         use_fsdp=True)
+    # decode
+    tp = 16
+    big = _params_bytes(model) / tp > _SERVE_FSDP_BYTES
+    if shape.global_batch == 1:                      # long_500k
+        return MeshRules(batch_axes=(),
+                         fsdp_axes=("data",),
+                         cache_seq_axes=pod + ("data", "model"),
+                         use_fsdp=big)
+    if big:
+        # PERF(it.1, grok decode): 2D weight-stationary serving.  Sharding
+        # the batch over the same axes that FSDP-shard the weights forces
+        # GSPMD to all-gather the WEIGHTS every step (measured 54 GB/step
+        # wire on grok).  Instead: batch on 'pod' only, weights stay sharded
+        # 2D (data x model), matmuls emit tiny activation psums, expert
+        # blocks are EP-sharded across data x model, and the KV cache is
+        # sequence-sharded across data x model.
+        return MeshRules(batch_axes=pod,
+                         fsdp_axes=("data",),
+                         cache_seq_axes=("data", "model"),
+                         ep_axes=("data", "model"),
+                         use_fsdp=True)
+    return MeshRules(batch_axes=pod + ("data",),
+                     fsdp_axes=pod + ("data",),
+                     cache_seq_axes=("model",),
+                     use_fsdp=False)
+
+
+def _validated(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop mesh axes from dims they don't divide (replicate instead) —
+    jit input shardings require exact divisibility."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _shardings(tree_specs, tree_abstract, mesh):
+    def mk(spec, ab):
+        return NamedSharding(mesh, _validated(spec, ab.shape, mesh))
+    return jax.tree.map(mk, tree_specs, tree_abstract)
+
+
+def _microbatches(model: Model, shape: ShapeConfig, n_dp: int,
+                  budget_bytes: float = 3e9) -> int:
+    """Gradient-accumulation factor keeping the per-device residual stack
+    (L x B_loc x S x d x 2B, the scan-carry remat checkpoint) under budget."""
+    cfg = model.cfg
+    b_loc = max(1, shape.global_batch // n_dp)
+    stack = cfg.n_layers * b_loc * shape.seq_len * cfg.d_model * 2.0
+    if cfg.is_encoder_decoder:
+        stack *= 2
+    mb = 1
+    while stack / mb > budget_bytes and mb < b_loc:
+        mb *= 2
+    while b_loc % mb != 0:
+        mb *= 2
+    return min(mb, b_loc)
+
+
+def build_cell(model: Model, shape: ShapeConfig, rules: MeshRules, mesh):
+    """Returns (fn, args_abstract, in_shardings, out_shardings,
+    donate_argnums, info)."""
+    cfg = model.cfg
+    info = {}
+
+    def named(tree_specs, tree_like=None):
+        if tree_specs is None:
+            return None
+        if tree_like is None:
+            return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+        return _shardings(tree_specs, tree_like, mesh)
+
+    if shape.kind == "train":
+        # PERF(it.2): >50B-param archs use bf16 moments (int8 blockwise
+        # moments exist and converge — tests — but their dequant reshape
+        # replicates under GSPMD; sharding them needs a shard_map optimizer,
+        # recorded as future work in EXPERIMENTS.md)
+        n = cfg.n_params()
+        moment_dtype = "bfloat16" if n > 5e10 else "float32"
+        n_dp = 1
+        for a in rules.batch_axes:
+            n_dp *= mesh.shape[a]
+        mb = _microbatches(model, shape, n_dp)
+        # layer-grouped remat when the residual stack is still over budget
+        # at the max microbatch count (see transformer.lm_forward)
+        b_loc = max(1, shape.global_batch // n_dp // mb)
+        stack = cfg.n_layers * b_loc * shape.seq_len * cfg.d_model * 2.0
+        if stack > 3e9 and not cfg.mamba_version \
+                and not cfg.is_encoder_decoder:
+            import dataclasses as _dc
+            for g in (2, 4, 8):
+                if cfg.n_layers % g == 0 and stack / g <= 3e9:
+                    break
+            cfg = _dc.replace(cfg, remat_group=g)
+            model = Model(cfg)
+            info.update(remat_group=g)
+        info.update(moment_dtype=moment_dtype, microbatches=mb)
+        opt = AdamW(AdamWConfig(moment_dtype=moment_dtype))
+        accum_dtype = jnp.bfloat16 if n > 2e11 else jnp.float32
+        step = make_train_step(model, opt, microbatches=mb,
+                               accum_dtype=accum_dtype)
+        a_params = model.abstract_params()
+        a_opt = opt.abstract_state(a_params)
+        a_batch = model.input_specs(shape)
+        p_specs = model.param_pspecs(rules)
+        p_sh = _shardings(p_specs, a_params, mesh)
+        o_sh = _shardings(opt.state_pspecs(p_specs), a_opt, mesh)
+        in_sh = (p_sh, o_sh,
+                 _shardings(model.batch_pspecs(shape, rules), a_batch, mesh))
+        metrics_sh = {k: NamedSharding(mesh, P())
+                      for k in ("grad_norm", "lr", "loss")}
+        out_sh = (p_sh, o_sh, metrics_sh)
+        return step, (a_params, a_opt, a_batch), in_sh, out_sh, (0, 1), info
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+        a_params = model.abstract_params()
+        a_batch = model.input_specs(shape)
+        p_specs = model.param_pspecs(rules)
+        in_sh = (_shardings(p_specs, a_params, mesh),
+                 _shardings(model.batch_pspecs(shape, rules), a_batch, mesh))
+        logits_sh = NamedSharding(mesh, _validated(
+            P(rules.resolve("batch"), "model"),
+            (shape.global_batch, cfg.vocab_size), mesh))
+        cache_sh = named(model.prefill_cache_pspecs(shape, rules))
+        out_sh = (logits_sh, cache_sh)
+        return prefill, (a_params, a_batch), in_sh, out_sh, (), info
+
+    # decode
+    def decode(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    a_params = model.abstract_params()
+    specs = model.input_specs(shape)
+    a_tokens, a_cache = specs["tokens"], specs["cache"]
+    p_specs = model.param_pspecs(rules)
+    b_specs = model.batch_pspecs(shape, rules)
+    cache_sh = _shardings(b_specs["cache"], a_cache, mesh)
+    in_sh = (_shardings(p_specs, a_params, mesh),
+             _shardings(b_specs["tokens"], a_tokens, mesh),
+             cache_sh)
+    logits_sh = NamedSharding(mesh, _validated(
+        P(rules.resolve("batch"), "model"),
+        (shape.global_batch, cfg.vocab_size), mesh))
+    out_sh = (logits_sh, cache_sh)
+    return decode, (a_params, a_tokens, a_cache), in_sh, out_sh, (2,), info
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}/{shape_name}/{mesh_name}"
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"cell": cell, "skipped": skip}
+
+    model = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(model, shape, multi_pod)
+    if cfg.n_experts and len(rules.ep_axes) > 1:
+        # 2D expert parallelism: expert-weight block count follows the EP
+        # axes product (checkpoint resharding is a reshape — elastic.py)
+        g = 1
+        for a in rules.ep_axes:
+            g *= mesh.shape[a]
+        import dataclasses as _dc
+        model = get_model(_dc.replace(cfg, ep_shards=g))
+    n_dev = mesh.size
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        fn, args, in_sh, out_sh, donate, info = build_cell(model, shape,
+                                                           rules, mesh)
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        record = profile_compiled(cell, compiled, n_devices=n_dev,
+                                  model_flops=model.model_flops(shape))
+    record.update({
+        "cell": cell, "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "multi_pod": multi_pod, "lower_s": t_lower, "compile_s": t_compile,
+        "build_info": info,
+        "rules": {
+            "batch_axes": rules.batch_axes, "fsdp_axes": rules.fsdp_axes,
+            "cache_seq_axes": rules.cache_seq_axes,
+            "use_fsdp": rules.use_fsdp},
+    })
+    if verbose:
+        mem = record.get("memory", {})
+        rl = record.get("roofline", {})
+        print(f"[dryrun] {cell}: compile {t_compile:.1f}s | "
+              f"dev bytes {mem.get('device_total_bytes', 0)/2**30:.2f} GiB | "
+              f"{rl.get('dominant')}-bound | modeled "
+              f"{float(rl.get('modeled_time_s') or 0)*1e3:.2f} ms | "
+              f"MFU {float(rl.get('mfu_vs_peak') or 0)*100:.1f}%")
+        sys.stdout.flush()
+    return record
+
+
+def _out_path(arch: str, shape_name: str, multi_pod: bool) -> str:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                path = _out_path(arch, shape_name, mp)
+                if args.resume and os.path.exists(path):
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mp)
+                except Exception as e:                      # noqa: BLE001
+                    rec = {"cell": f"{arch}/{shape_name}/mp={mp}",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append(rec["cell"])
+                    print(f"[dryrun] FAILED {rec['cell']}: {rec['error']}")
+                    sys.stdout.flush()
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    if failures:
+        print(f"[dryrun] {len(failures)} failures: {failures}")
+        return 1
+    print("[dryrun] all requested cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Production training launcher: builds the mesh + rules for an assigned
+architecture, restores the newest checkpoint, and runs the training loop.
+
+On the real cluster each host runs:
+    python -m repro.launch.train --arch grok-1-314b --shape train_4k \
+        --coordinator <addr> --num-hosts N --host-id i
+(jax.distributed wiring included).  On this CPU container, run with
+--local-smoke to execute a reduced config end-to-end through the same code
+path.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--local-smoke", action="store_true")
+    ap.add_argument("--coordinator", default="")
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        import jax
+        jax.distributed.initialize(args.coordinator, args.num_hosts,
+                                   args.host_id)
+
+    from repro import configs
+    from repro.configs import SHAPES
+    from repro.data.pipeline import DataConfig
+    from repro.models import get_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.schedule import cosine_with_warmup
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = configs.get(args.arch)
+    if args.local_smoke:
+        cfg = cfg.reduced()
+        seq_len, global_batch = 64, 4
+    else:
+        shape = SHAPES[args.shape]
+        seq_len, global_batch = shape.seq_len, shape.global_batch
+        # production mesh + sharding context
+        from repro.dist.sharding import set_context
+        from repro.launch.dryrun import rules_for
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+        model_tmp = get_model(cfg)
+        set_context(mesh, rules_for(model_tmp, shape, multi_pod=False))
+
+    model = get_model(cfg)
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr=cosine_with_warmup(3e-4, 100, args.steps),
+                    moment_dtype="bfloat16" if cfg.n_params() > 2e11
+                    else "float32"),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                   global_batch=global_batch,
+                   num_hosts=args.num_hosts, host_index=args.host_id,
+                   emit_embeddings=not cfg.embed_inputs
+                   and not cfg.is_encoder_decoder,
+                   emit_frames=cfg.is_encoder_decoder,
+                   d_model=cfg.d_model),
+        TrainerConfig(steps=args.steps, checkpoint_dir=args.ckpt or None,
+                      checkpoint_every=50),
+    )
+    out = trainer.run()
+    print(f"[launch.train] done: loss {out['first_loss']:.4f} -> "
+          f"{out['last_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,135 @@
+"""Attention: GQA/MQA multi-head attention with a chunked, online-softmax
+("flash-style") path for long sequences and a direct path for short/decode.
+
+The chunked path is also the pure-jnp oracle (``ref``) for the Pallas flash
+kernel in ``repro.kernels.flash_attention``; tests assert all three paths
+(direct, chunked, Pallas-interpret) agree.
+
+Layout convention: q (B, S, H, D); k, v (B, T, KV, D).  KV heads are
+broadcast to H before the einsums (keeps GSPMD propagation trivial: H is
+sharded on the model axis, KV stays replicated when KV < TP).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KV, D) -> (B, T, H, D) by repeating each kv head H/KV times."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    reps = n_heads // kv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool,
+                     q_offset: Optional[jax.Array] = None,
+                     kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Materializes (B, KV, G, S, T) scores — fine for decode (S == 1) and
+    smoke shapes.  GQA/MQA via grouped einsums: the kv heads are NEVER
+    materialized repeated (repeating a 32k MQA cache to 48 heads costs
+    ~3 GB/layer).  ``q_offset`` is the absolute position of q[0] (decode);
+    ``kv_len`` masks cache positions >= kv_len."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    tpos = jnp.arange(T)
+    if causal:
+        qpos = jnp.arange(S)
+        if q_offset is not None:
+            qpos = qpos + q_offset
+        mask = qpos[:, None] >= tpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:
+        s = jnp.where((tpos < kv_len)[None, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool, chunk_q: int = 1024,
+                      chunk_kv: int = 1024) -> jax.Array:
+    """Flash-style two-level scan with online softmax; peak memory
+    O(chunk_q x chunk_kv) per (B, H).  Baseline computes every (qi, kj)
+    block and masks — the causal-block skip lives in the Pallas kernel (and
+    the wasted half shows up in the useful-flops roofline column, by
+    design)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    k = repeat_kv(k, H)
+    v = repeat_kv(v, H)
+    cq = min(chunk_q, S)
+    ck = min(chunk_kv, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / math.sqrt(D)
+
+    qc = q.reshape(B, nq, cq, H, D).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 2, 3, 4)
+
+    def one_q_chunk(qi, qblk):
+        # qblk (B, cq, H, D)
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, H, D), jnp.float32)
+
+        def inner(carry, inputs):
+            m, l, acc = carry
+            kj, kblk, vblk = inputs
+            s = jnp.einsum("bshd,bthd->bhst", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)
+                kpos = kj * ck + jnp.arange(ck)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhst,bthd->bshd", p, vblk.astype(jnp.float32))
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    out_chunks = jax.lax.map(lambda args: one_q_chunk(*args),
+                             (jnp.arange(nq), qc))
+    return out_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+              chunk_q: int = 1024, chunk_kv: int = 1024,
+              q_offset: Optional[jax.Array] = None,
+              kv_len: Optional[jax.Array] = None,
+              impl: str = "reference") -> jax.Array:
+    """Dispatch: decode and small shapes -> direct; long -> flash (custom-vjp
+    chunked jnp, or the Pallas kernel when impl == 'pallas')."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    if impl == "pallas" and S > 1 and kv_len is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(q, k, v, causal=causal)
+    if S == 1 or (S * T <= chunk_q * chunk_kv) or kv_len is not None:
+        return direct_attention(q, k, v, causal, q_offset, kv_len)
+    from repro.models.flash import flash_attention_ref
+    return flash_attention_ref(q, repeat_kv(k, H), repeat_kv(v, H),
+                               causal, chunk_q, chunk_kv)

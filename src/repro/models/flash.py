@@ -1,0 +1,222 @@
+"""Memory-efficient chunked attention with a custom VJP (pure-jnp flash).
+
+Why this exists: reverse-mode AD through a naive online-softmax scan saves
+every (cq x ck) probability block — the full S x S matrix — as scan
+residuals, which destroys flash attention's O(S) memory property (measured
+~95 GB/layer-iteration of residual traffic on the qwen2 train cell).  The
+custom VJP saves only (q, k, v, out, L = rowwise logsumexp) and recomputes
+score blocks in the backward pass.
+
+Structure notes (they matter for the roofline):
+
+  * Causal blocks are enumerated STATICALLY as a triangular (i, j) list —
+    fully-masked blocks are never emitted, so the causal saving is
+    structural (visible to the compiler and the HLO census), not a runtime
+    branch.  For S = 32k / chunk 1k this halves attention FLOPs.
+  * The scans carry only ONE chunk's accumulator state and EMIT finished
+    chunks through scan ys (combined with a segment-sum): carrying stacked
+    (nq, ...) accumulators makes XLA shuffle the full buffer through the
+    loop carry every iteration.
+  * The backward uses the standard two-pass split (dq pass over i-ordered
+    blocks; dk/dv pass over j-ordered blocks) so neither pass carries a
+    cross-chunk accumulator; scores are recomputed in each pass.
+
+This is also the pure-jnp oracle for the Pallas flash kernel
+(repro/kernels/flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pairs_by_i(nq, nk, causal, cq, ck):
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if not (causal and j * ck > i * cq + cq - 1)]
+    ii = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    jj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    last = jnp.asarray([t == len(pairs) - 1 or pairs[t + 1][0] != pairs[t][0]
+                        for t in range(len(pairs))], jnp.bool_)
+    first = jnp.asarray([t == 0 or pairs[t - 1][0] != pairs[t][0]
+                         for t in range(len(pairs))], jnp.bool_)
+    return ii, jj, first, last
+
+
+def _pairs_by_j(nq, nk, causal, cq, ck):
+    pairs = [(i, j) for j in range(nk) for i in range(nq)
+             if not (causal and j * ck > i * cq + cq - 1)]
+    ii = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    jj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    last = jnp.asarray([t == len(pairs) - 1 or pairs[t + 1][1] != pairs[t][1]
+                        for t in range(len(pairs))], jnp.bool_)
+    first = jnp.asarray([t == 0 or pairs[t - 1][1] != pairs[t][1]
+                         for t in range(len(pairs))], jnp.bool_)
+    return ii, jj, first, last
+
+
+def _mask(s, i, j, cq, ck):
+    qpos = i * cq + jnp.arange(cq)
+    kpos = j * ck + jnp.arange(ck)
+    keep = qpos[:, None] >= kpos[None, :]
+    return jnp.where(keep[None, :, None, :], s, NEG_INF)
+
+
+def _scores(qb, kb, scale, causal, i, j, cq, ck):
+    s = jnp.einsum("bshd,bthd->bsht", qb.astype(jnp.float32),
+                   kb.astype(jnp.float32)) * scale
+    if causal:
+        s = _mask(s, i, j, cq, ck)
+    return s
+
+
+@functools.lru_cache(maxsize=64)
+def _make_flash(causal: bool, cq: int, ck: int):
+    """Builds the custom-vjp flash function for given static block sizes."""
+
+    def fwd_impl(q, k, v):
+        # q (B,S,H,D); k,v (B,T,H,D) — kv already repeated to H heads
+        B, S, H, D = q.shape
+        T = k.shape[1]
+        nq, nk = S // cq, T // ck
+        scale = 1.0 / math.sqrt(D)
+        ii, jj, first, last = _pairs_by_i(nq, nk, causal, cq, ck)
+
+        qc = q.reshape(B, nq, cq, H, D)
+        kc = k.reshape(B, nk, ck, H, D)
+        vc = v.reshape(B, nk, ck, H, D)
+
+        m0 = jnp.full((B, cq, H), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cq, H), jnp.float32)
+        a0 = jnp.zeros((B, cq, H, D), jnp.float32)
+
+        def step(carry, xs):
+            m, l, acc = carry
+            i, j, fst, lst = xs
+            m = jnp.where(fst, m0, m)
+            l = jnp.where(fst, l0, l)
+            acc = jnp.where(fst, a0, acc)
+            qb = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+            kb = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+            s = _scores(qb, kb, scale, causal, i, j, cq, ck)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bsht,bthd->bshd", p, vb.astype(jnp.float32))
+            a_new = acc * corr[..., None] + pv
+            lsafe = jnp.maximum(l_new, 1e-30)
+            out_blk = jnp.where(lst, a_new / lsafe[..., None], 0.0)
+            L_blk = jnp.where(lst, m_new + jnp.log(lsafe), 0.0)
+            return (m_new, l_new, a_new), (out_blk, L_blk)
+
+        _, (out_blocks, L_blocks) = jax.lax.scan(
+            step, (m0, l0, a0), (ii, jj, first, last))
+        # only the last-j step of each q chunk emitted non-zero: segment-sum
+        out = jax.ops.segment_sum(out_blocks, ii, nq)       # (nq,B,cq,H,D)
+        L = jax.ops.segment_sum(L_blocks, ii, nq)           # (nq,B,cq,H)
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D).astype(q.dtype)
+        L = L.transpose(1, 0, 2, 3).reshape(B, S, H)
+        return out, L
+
+    def bwd_impl(q, k, v, out, L, dout):
+        B, S, H, D = q.shape
+        T = k.shape[1]
+        nq, nk = S // cq, T // ck
+        scale = 1.0 / math.sqrt(D)
+
+        qc = q.reshape(B, nq, cq, H, D)
+        kc = k.reshape(B, nk, ck, H, D)
+        vc = v.reshape(B, nk, ck, H, D)
+        doc = dout.astype(jnp.float32).reshape(B, nq, cq, H, D)
+        Lc = L.reshape(B, nq, cq, H)
+        # D_i = rowsum(dO * O)
+        Dc = jnp.sum(out.astype(jnp.float32).reshape(B, nq, cq, H, D) * doc,
+                     axis=-1)                               # (B,nq,cq,H)
+
+        def block(i, j):
+            qb = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+            kb = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+            Lb = jax.lax.dynamic_index_in_dim(Lc, i, 1, keepdims=False)
+            Db = jax.lax.dynamic_index_in_dim(Dc, i, 1, keepdims=False)
+            dob = jax.lax.dynamic_index_in_dim(doc, i, 1, keepdims=False)
+            s = _scores(qb, kb, scale, causal, i, j, cq, ck)
+            p = jnp.exp(s - Lb[..., None])                  # (B,cq,H,ck)
+            dp = jnp.einsum("bshd,bthd->bsht", dob, vb.astype(jnp.float32))
+            ds = p * (dp - Db[..., None]) * scale
+            return qb, kb, vb, p, ds, dob
+
+        # pass 1: dq, blocks ordered by i (carry = one chunk's dq)
+        ii, jj, first, last = _pairs_by_i(nq, nk, causal, cq, ck)
+
+        def step_dq(carry, xs):
+            i, j, fst, lst = xs
+            carry = jnp.where(fst, 0.0, carry)
+            qb, kb, vb, p, ds, dob = block(i, j)
+            dqi = carry + jnp.einsum("bsht,bthd->bshd", ds,
+                                     kb.astype(jnp.float32))
+            return dqi, jnp.where(lst, dqi, 0.0)
+
+        dq0 = jnp.zeros((B, cq, H, D), jnp.float32)
+        _, dq_blocks = jax.lax.scan(step_dq, dq0, (ii, jj, first, last))
+        dq = jax.ops.segment_sum(dq_blocks, ii, nq)
+        dq = dq.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D).astype(q.dtype)
+
+        # pass 2: dk/dv, blocks ordered by j (carry = one chunk's dk/dv)
+        ii2, jj2, first2, last2 = _pairs_by_j(nq, nk, causal, cq, ck)
+
+        def step_dkv(carry, xs):
+            i, j, fst, lst = xs
+            dk_c, dv_c = carry
+            dk_c = jnp.where(fst, 0.0, dk_c)
+            dv_c = jnp.where(fst, 0.0, dv_c)
+            qb, kb, vb, p, ds, dob = block(i, j)
+            dv_c = dv_c + jnp.einsum("bsht,bshd->bthd", p, dob)
+            dk_c = dk_c + jnp.einsum("bsht,bshd->bthd", ds,
+                                     qb.astype(jnp.float32))
+            return (dk_c, dv_c), (jnp.where(lst, dk_c, 0.0),
+                                  jnp.where(lst, dv_c, 0.0))
+
+        z = jnp.zeros((B, ck, H, D), jnp.float32)
+        _, (dk_blocks, dv_blocks) = jax.lax.scan(
+            step_dkv, (z, z), (ii2, jj2, first2, last2))
+        dk = jax.ops.segment_sum(dk_blocks, jj2, nk)
+        dv = jax.ops.segment_sum(dv_blocks, jj2, nk)
+        dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D).astype(k.dtype)
+        dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D).astype(v.dtype)
+        return dq, dk, dv
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = fwd_impl(q, k, v)
+        return out
+
+    def flash_fwd(q, k, v):
+        out, L = fwd_impl(q, k, v)
+        return out, (q, k, v, out, L)
+
+    def flash_bwd(res, dout):
+        q, k, v, out, L = res
+        return bwd_impl(q, k, v, out, L, dout)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool, chunk_q: int = 1024,
+                        chunk_kv: int = 1024) -> jax.Array:
+    """Public entry: q (B,S,H,D); k,v (B,T,H,D) with H == q heads."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    cq = min(chunk_q, S)
+    ck = min(chunk_kv, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    return _make_flash(bool(causal), cq, ck)(q, k, v)

@@ -1,0 +1,129 @@
+"""Core layers: norms, dense, embeddings, rotary (standard + M-RoPE).
+
+Parameters are built from a *schema* (see models/params.py): every leaf is
+declared once with shape + logical sharding axes + init kind, and the same
+schema yields (a) rng-initialized arrays, (b) ShapeDtypeStructs for AOT
+lowering, (c) PartitionSpecs for the mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with fp32 variance but bf16 application.
+
+    PERF(it.2, llama4 train): every op that touches x directly stays in
+    x's dtype — when the first consumer of the remat-saved residual slice
+    is a pure bf16->f32 convert, XLA hoists the conversion of the ENTIRE
+    (L, B, S, d) saved stack out of the backward loop (measured +8 GiB of
+    f32 temp on llama4).  The reduction itself still accumulates in fp32;
+    applying the (B, S, 1) rsqrt factor in bf16 costs <0.4% relative error
+    on the normalized output."""
+    var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * scale.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+          ) -> jax.Array:
+    # Plain same-dtype dot: the TPU MXU accumulates in fp32 internally for
+    # bf16 operands, and XLA:CPU's thunk runtime cannot execute mixed
+    # bf16 x bf16 -> f32 dots inside while bodies.
+    y = jnp.dot(x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(h: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits via the (possibly tied) embedding table: (…, d) @ (V, d)^T.
+
+    Output stays in the activation dtype (bf16): the MXU accumulates fp32
+    internally, and keeping the cotangent path bf16 prevents reverse-mode AD
+    from materializing f32 copies of every residual buffer.  The loss
+    upcasts to f32 before softmax."""
+    return jnp.dot(h, table.T)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> (cos, sin) of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int, theta: float,
+                 sections: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE (Qwen2-VL): positions (3, B, S); the rotary half-dim is split
+    into (temporal, height, width) sections, each driven by its own position
+    stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3,B,S,half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                       # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B, S, D/2). Rotate-half convention."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x32[..., :half], x32[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings: positions (..., S) ->
+    (..., S, d_model)."""
+    half = d_model // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(10000.0) / max(1, half - 1)))
+    ang = positions.astype(jnp.float32)[..., None] * scale
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu(dense(x, w_up, b_up), approximate=True)
+    return dense(h, w_down, b_down)

@@ -1,0 +1,110 @@
+"""Fused unembed + softmax cross-entropy, sequence-chunked, custom VJP.
+
+The naive path materializes logits three times around the loss —
+(B, S, V) bf16 from the unembed, an f32 copy for logsumexp, and an f32
+cotangent — ~6 GiB/device for a 4k x 16 local batch at V=152k.  This
+implementation never materializes logits for more than one sequence chunk:
+
+  forward: scan over S-chunks; per chunk compute h_c @ E^T in f32, reduce to
+           (lse_c, gold_c), discard the chunk logits.  Residuals: h, E,
+           labels, per-position lse — O(B*S) instead of O(B*S*V).
+  backward: recompute chunk logits, form d_logits = (softmax - onehot)/N
+           chunk-by-chunk, accumulate dh (emitted per chunk) and dE (carry).
+
+Works under GSPMD with the vocab dim of E sharded on the model axis (the
+logsumexp/gather reductions over V become partial + all-reduce of (B, c)
+vectors).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+@functools.lru_cache(maxsize=16)
+def _make_fused_xent(chunk: int):
+
+    def _chunk_stats(h_c, table, labels_c):
+        # h_c (B,c,d); table (V,d); labels (B,c).  The dot stays in the
+        # activation dtype (MXU accumulates fp32; a pure astype(f32) of h_c
+        # makes XLA hoist an f32 copy of the microbatch-saved hidden stack);
+        # the softmax statistics are fp32.
+        logits = jnp.dot(h_c, table.T).astype(jnp.float32)  # (B,c,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)             # (B,c)
+        gold = jnp.take_along_axis(logits, labels_c[..., None],
+                                   axis=-1)[..., 0]
+        return lse, gold
+
+    def fwd_impl(h, table, labels):
+        B, S, d = h.shape
+        n = S // chunk
+        hc = h.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+        def step(_, xs):
+            h_c, l_c = xs
+            return None, _chunk_stats(h_c, table, l_c)
+
+        _, (lse, gold) = jax.lax.scan(step, None, (hc, lc))
+        loss = jnp.mean(lse - gold)                        # over B*S
+        return loss, lse
+
+    @jax.custom_vjp
+    def fused(h, table, labels):
+        return fwd_impl(h, table, labels)[0]
+
+    def fused_fwd(h, table, labels):
+        loss, lse = fwd_impl(h, table, labels)
+        return loss, (h, table, labels, lse)
+
+    def fused_bwd(res, g):
+        h, table, labels, lse = res
+        B, S, d = h.shape
+        V = table.shape[0]
+        n = S // chunk
+        denom = B * S
+        hc = h.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+        lsec = lse                                          # (n, B, chunk)
+
+        # keep the (V, d) f32 embedding-grad accumulator SHARDED through the
+        # scan: unsharded it is gigabytes per device (llama4: 2 x 4.1 GB
+        # carry buffers — the cell's memory overage)
+        dE0 = constrain(jnp.zeros(table.shape, jnp.float32),
+                        "model", "fsdp")
+
+        def step(dE, xs):
+            h_c, l_c, lse_c = xs
+            logits = jnp.dot(h_c, table.T).astype(jnp.float32)
+            p = jnp.exp(logits - lse_c[..., None])         # softmax (B,c,V)
+            onehot = jax.nn.one_hot(l_c, V, dtype=jnp.float32)
+            dlog = (p - onehot) * (g / denom)
+            dh_c = jnp.einsum("bcv,vd->bcd", dlog.astype(table.dtype),
+                              table).astype(jnp.float32)
+            dE = dE + jnp.einsum("bcv,bcd->vd", dlog.astype(h_c.dtype),
+                                 h_c)
+            return constrain(dE, "model", "fsdp"), dh_c
+
+        dE, dh_chunks = jax.lax.scan(step, dE0, (hc, lc, lsec))
+        dh = dh_chunks.transpose(1, 0, 2, 3).reshape(B, S, d).astype(h.dtype)
+        return dh, dE.astype(table.dtype), None
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused
+
+
+def fused_unembed_xent(h: jax.Array, table: jax.Array, labels: jax.Array,
+                       chunk: int = 512) -> jax.Array:
+    """Mean token NLL of softmax(h @ table^T) against labels, computed
+    without materializing full logits.  h (B,S,d); table (V,d);
+    labels (B,S) int32."""
+    B, S, d = h.shape
+    c = min(chunk, S)
+    while S % c != 0:
+        c //= 2
+    return _make_fused_xent(max(1, c))(h, table, labels)

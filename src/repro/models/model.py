@@ -1,0 +1,188 @@
+"""Model facade: one object per ArchConfig exposing init / abstract specs /
+partition specs / loss / prefill / decode, plus ``input_specs`` for AOT
+lowering (ShapeDtypeStructs — never allocates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import MeshRules
+from repro.models import transformer as T
+from repro.models.params import (
+    ParamDecl, abstract_params, init_params, param_pspecs)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (B, S, V) fp32; labels (B, S) int32. Mean NLL."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters ----------------------------------------------------------
+    def schema(self):
+        return T.schema(self.cfg)
+
+    def init(self, key: jax.Array):
+        return init_params(self.schema(), key, self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.schema(), self.cfg.param_dtype)
+
+    def param_pspecs(self, rules: MeshRules):
+        return param_pspecs(self.schema(), rules)
+
+    # -- caches ---------------------------------------------------------------
+    def cache_decls(self, batch: int, max_seq: int):
+        return T.cache_decls(self.cfg, batch, max_seq)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return init_params(self.cache_decls(batch, max_seq), jax.random.key(0),
+                           self.cfg.param_dtype)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return abstract_params(self.cache_decls(batch, max_seq),
+                               self.cfg.param_dtype)
+
+    def cache_pspecs(self, batch: int, max_seq: int, rules: MeshRules):
+        return param_pspecs(self.cache_decls(batch, max_seq), rules)
+
+    def prefill_cache_pspecs(self, shape: ShapeConfig, rules: MeshRules):
+        """PartitionSpecs matching the cache-parts pytree that prefill()
+        actually returns (a subset of the decode cache)."""
+        full = self.cache_pspecs(shape.global_batch, shape.seq_len, rules)
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return None
+        if cfg.family == "hybrid":
+            return {"attn_k": full["attn_k"], "attn_v": full["attn_v"]}
+        keys = ["k", "v"]
+        if cfg.is_encoder_decoder:
+            keys += ["cross_k", "cross_v"]
+        return {k: full[k] for k in keys}
+
+    # -- steps ----------------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any]) -> jax.Array:
+        """batch: tokens|embeds (+frames for enc-dec), labels, positions?
+
+        Uses the fused unembed + softmax-CE (never materializes full
+        logits — see models/losses.py)."""
+        from repro.models.losses import fused_unembed_xent
+        cfg = self.cfg
+        labels = batch["labels"]
+        if cfg.is_encoder_decoder:
+            hidden, aux, _ = T.whisper_forward(
+                params, cfg, batch["frames"], batch["tokens"], mode="hidden")
+        else:
+            inputs = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+            positions = batch.get("positions")
+            if positions is None:
+                B, S = labels.shape
+                positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            hidden, aux, _ = T.lm_forward(params, cfg, inputs, positions,
+                                          mode="hidden")
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        ce = fused_unembed_xent(hidden, table, labels)
+        return ce + cfg.router_aux_weight * aux
+
+    def prefill(self, params, batch: Dict[str, Any]):
+        """Returns (last-position logits (B, V), cache-parts)."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            logits, _, cache = T.whisper_forward(
+                params, cfg, batch["frames"], batch["tokens"], mode="prefill")
+        else:
+            inputs = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+            positions = batch.get("positions")
+            if positions is None:
+                if cfg.embed_inputs:
+                    B, S = inputs.shape
+                else:
+                    B, S, _ = inputs.shape
+                positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            logits, _, cache = T.lm_forward(params, cfg, inputs, positions,
+                                            mode="prefill")
+        return logits[:, -1], cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens (B, 1) int32 (always token ids — decode emits tokens even
+        for stub-frontend archs); returns (logits (B, V), cache)."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return T.whisper_decode(params, cfg, tokens, cache)
+        if not cfg.embed_inputs:
+            # stub-frontend archs decode text tokens through the embed table
+            cfg2 = dataclasses.replace(cfg, embed_inputs=True)
+            return T.lm_decode(params, cfg2, tokens, cache)
+        return T.lm_decode(params, cfg, tokens, cache)
+
+    # -- AOT input specs -------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32, bf = jnp.int32, cfg.param_dtype
+        sds = jax.ShapeDtypeStruct
+        if shape.kind in ("train", "prefill"):
+            batch: Dict[str, Any] = {"labels": sds((B, S), i32)}
+            if cfg.is_encoder_decoder:
+                batch["frames"] = sds((B, S, cfg.d_model), bf)
+                batch["tokens"] = sds((B, S), i32)
+            elif cfg.embed_inputs:
+                batch["tokens"] = sds((B, S), i32)
+            else:
+                batch["embeds"] = sds((B, S, cfg.d_model), bf)
+                if cfg.mrope_sections:
+                    batch["positions"] = sds((3, B, S), i32)
+            if shape.kind == "prefill":
+                batch.pop("labels")
+            return batch
+        # decode: one token + cache
+        return {"tokens": sds((B, 1), i32),
+                "cache": self.abstract_cache(B, S)}
+
+    def batch_pspecs(self, shape: ShapeConfig, rules: MeshRules):
+        cfg = self.cfg
+        specs: Dict[str, Any] = {}
+        b = rules.resolve("batch")
+        if shape.kind in ("train", "prefill"):
+            if shape.kind == "train":
+                specs["labels"] = P(b, None)
+            if cfg.is_encoder_decoder:
+                specs["frames"] = P(b, None, None)
+                specs["tokens"] = P(b, None)
+            elif cfg.embed_inputs:
+                specs["tokens"] = P(b, None)
+            else:
+                specs["embeds"] = P(b, None, None)
+                if cfg.mrope_sections:
+                    specs["positions"] = P(None, b, None)
+            return specs
+        return {"tokens": P(b, None),
+                "cache": self.cache_pspecs(shape.global_batch, shape.seq_len,
+                                           rules)}
+
+    # -- roofline bookkeeping ---------------------------------------------------
+    def model_flops(self, shape: ShapeConfig) -> float:
+        """Algorithmic FLOPs for one step: 6·N_active·D for train,
+        2·N_active·D for prefill/decode forward (D = processed tokens)."""
+        n_active = self.cfg.active_params()
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        mult = 6.0 if shape.kind == "train" else 2.0
+        return mult * n_active * tokens
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,90 @@
+"""Parameter schema: declare every leaf once; derive init / abstract specs /
+partition specs from the same declaration (no tree drift).
+
+Leaves are ``ParamDecl(shape, axes, init, dtype)`` where ``axes`` are logical
+sharding names per dimension ("fsdp" | "model" | None), resolved by the
+active ``MeshRules``.  Stacked (scan) parameters get a leading layer dim with
+axis None.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import MeshRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"             # normal | zeros | ones | embed | ssm_a | ssm_dt
+    dtype: Any = None                # None -> cfg param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stacked(decl: ParamDecl, n: int) -> ParamDecl:
+    return ParamDecl((n,) + decl.shape, (None,) + decl.axes, decl.init,
+                     decl.dtype)
+
+
+# --- tree utilities ---------------------------------------------------------
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def map_schema(fn: Callable[[ParamDecl], Any], schema) -> Any:
+    return jax.tree.map(fn, schema, is_leaf=_is_decl)
+
+
+def abstract_params(schema, default_dtype=jnp.bfloat16):
+    def mk(d: ParamDecl):
+        return jax.ShapeDtypeStruct(d.shape, d.dtype or default_dtype)
+    return map_schema(mk, schema)
+
+
+def param_pspecs(schema, rules: MeshRules):
+    def mk(d: ParamDecl):
+        return P(*(rules.resolve(a) for a in d.axes))
+    return map_schema(mk, schema)
+
+
+def init_params(schema, key: jax.Array, default_dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = d.dtype or default_dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        elif d.init == "embed":
+            out.append(jax.random.normal(k, d.shape, dt) * 0.02)
+        elif d.init == "ssm_a":
+            # mamba A_log init: log(1..N) broadcast over channels
+            n = d.shape[-1]
+            a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+            out.append(jnp.broadcast_to(a, d.shape).astype(dt))
+        elif d.init == "ssm_a_scalar":
+            out.append(jnp.zeros(d.shape, dt))      # A = -exp(0) = -1 per head
+        elif d.init == "ssm_dt":
+            # dt bias init so softplus(dt) spans ~[1e-3, 1e-1]
+            lo, hi = math.log(1e-3), math.log(1e-1)
+            u = jax.random.uniform(k, d.shape, jnp.float32)
+            out.append(jnp.log(jnp.expm1(jnp.exp(lo + u * (hi - lo))) + 1e-9
+                               ).astype(dt))
+        else:                                        # fan-in normal
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            out.append(jax.random.normal(k, d.shape, jnp.float32).astype(dt)
+                       * jnp.asarray(std, dt))
+    return jax.tree.unflatten(treedef, out)

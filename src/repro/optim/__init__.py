@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWConfig  # noqa: F401
+from repro.optim.schedule import (  # noqa: F401
+    constant, cosine_with_warmup, linear_warmup)

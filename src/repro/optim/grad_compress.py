@@ -1,0 +1,55 @@
+"""Int8 error-feedback gradient compression for the data-parallel all-reduce.
+
+At 1k+ nodes the DP gradient all-reduce is wire-bound; compressing the
+payload to int8 with per-block scales cuts it 4x (vs f32) while error
+feedback keeps the optimizer trajectory unbiased: the quantization residual
+is carried and added to the next step's gradient, so errors cannot
+accumulate.
+
+Usage inside a shard_map'd step:
+    g_q, scales = compress(g + residual)
+    g_sum = lax.psum(g_q.astype(f32) * scales, "data")   # or int8 wire + local dequant
+    residual = (g + residual) - dequantize(g_q, scales)
+
+The unit tests validate the EF-SGD invariant (compressed-sum trajectory
+converges to the uncompressed one) and exact shape round-trips.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (any shape) f32 -> (int8 blocks (nb, BLOCK), scales (nb, 1))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blk), axis=1, keepdims=True),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(blk / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def ef_step(grad: jax.Array, residual: jax.Array
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One error-feedback compression step.
+    Returns (q, scale, new_residual, dequantized)."""
+    comp_in = grad.astype(jnp.float32) + residual
+    q, scale = compress(comp_in)
+    deq = decompress(q, scale, grad.shape)
+    new_residual = comp_in - deq
+    return q, scale, new_residual, deq

@@ -1,0 +1,30 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(1, warmup_steps),
+                           1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+    return fn
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int,
+                       min_ratio: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(1, warmup_steps), 1.0)
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+    return fn

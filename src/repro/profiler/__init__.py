@@ -1,0 +1,1 @@
+from repro.profiler.session import profile_compiled  # noqa: F401

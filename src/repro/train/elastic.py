@@ -1,0 +1,74 @@
+"""Elastic scaling: reshard a checkpointed train state onto a different
+mesh / world size.
+
+Checkpoints store mesh-agnostic full arrays (see checkpoint.py), so elastic
+resize = restore + re-placement under the new mesh rules.  What this module
+adds on top:
+
+  * ``replan_batch``: keep the GLOBAL batch constant across world sizes by
+    recomputing per-host batch + gradient-accumulation factor (so loss
+    scale/optimizer hyperparameters are unchanged when nodes join/leave);
+  * ``reshard``: place a restored state onto a new mesh via the schema's
+    partition specs (dropping axes that no longer divide — e.g. shrinking
+    16-way TP to 8-way);
+  * failure-recovery flow used by the trainer: on a detected node loss,
+    rebuild the mesh from surviving hosts, replan, restore from the newest
+    commit, continue (exercised in tests with host-device submeshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import MeshRules
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    global_batch: int
+    n_data_shards: int
+    per_shard_batch: int
+    grad_accum: int
+
+    @property
+    def per_step_batch(self) -> int:
+        return self.per_shard_batch * self.n_data_shards * self.grad_accum
+
+
+def replan_batch(global_batch: int, n_data_shards: int,
+                 max_per_shard: int = 64) -> BatchPlan:
+    """Keep global batch fixed while the data-parallel world resizes."""
+    assert global_batch % n_data_shards == 0, (global_batch, n_data_shards)
+    per = global_batch // n_data_shards
+    accum = 1
+    while per > max_per_shard:
+        assert per % 2 == 0, per
+        per //= 2
+        accum *= 2
+    return BatchPlan(global_batch, n_data_shards, per, accum)
+
+
+def _validated(spec: P, shape, mesh) -> P:
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def reshard(state, pspecs, mesh) -> Any:
+    """Place a (host-resident) state pytree onto ``mesh`` per ``pspecs``,
+    replicating any dim the new mesh no longer divides."""
+    def place(x, spec):
+        sh = NamedSharding(mesh, _validated(spec, x.shape, mesh))
+        return jax.device_put(x, sh)
+    return jax.tree.map(place, state, pspecs)

@@ -1,0 +1,113 @@
+"""Training loop with checkpoint/restart, straggler monitoring, and metrics.
+
+This is the CPU-runnable end-to-end driver (examples/train_100m.py uses it);
+the same loop structure is what launch/train.py runs per host at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.train import checkpoint as ckpt
+from repro.train.straggler import StragglerMonitor
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    microbatches: int = 1
+    seed: int = 0
+    async_checkpoint: bool = True
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: AdamWConfig,
+                 data_cfg: DataConfig, cfg: TrainerConfig):
+        self.model = model
+        self.optimizer = AdamW(opt_cfg)
+        self.pipeline = SyntheticTokenPipeline(data_cfg)
+        self.cfg = cfg
+        self.step_fn = jax.jit(make_train_step(
+            model, self.optimizer, microbatches=cfg.microbatches),
+            donate_argnums=(0, 1))
+        self.monitor = StragglerMonitor(data_cfg.num_hosts)
+        self.checkpointer = ckpt.AsyncCheckpointer()
+        self.history: List[Dict[str, float]] = []
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self):
+        params = self.model.init(jax.random.key(self.cfg.seed))
+        opt_state = self.optimizer.init(params)
+        return {"params": params, "opt": opt_state}
+
+    def _maybe_restore(self, state):
+        d = self.cfg.checkpoint_dir
+        if not d:
+            return 0, state
+        got = ckpt.restore(d, state)
+        if got is None:
+            return 0, state
+        step, state, extra = got
+        print(f"[trainer] restored checkpoint at step {step}")
+        return int(extra.get("data_step", step)), state
+
+    # -- loop ----------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        state = self.init_state()
+        start_step, state = self._maybe_restore(state)
+        params, opt_state = state["params"], state["opt"]
+        losses = []
+        t_start = time.time()
+        for step in range(start_step, self.cfg.steps):
+            t0 = time.time()
+            batch_np = self.pipeline.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if "embeds" in batch:
+                batch["embeds"] = batch["embeds"].astype(
+                    self.model.cfg.param_dtype)
+            if "frames" in batch:
+                batch["frames"] = batch["frames"].astype(
+                    self.model.cfg.param_dtype)
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            self.monitor.update({self.pipeline.cfg.host_index: dt})
+            self.history.append({"step": step, "loss": loss, "time_s": dt,
+                                 "grad_norm": float(metrics["grad_norm"])})
+            if step % self.cfg.log_every == 0:
+                print(f"[trainer] step {step} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"{dt*1e3:.0f} ms")
+            if (self.cfg.checkpoint_dir
+                    and (step + 1) % self.cfg.checkpoint_every == 0):
+                st = {"params": params, "opt": opt_state}
+                if self.cfg.async_checkpoint:
+                    self.checkpointer.save(self.cfg.checkpoint_dir, step + 1,
+                                           st, {"data_step": step + 1})
+                else:
+                    ckpt.save(self.cfg.checkpoint_dir, step + 1, st,
+                              {"data_step": step + 1})
+        self.checkpointer.wait()
+        return {
+            "losses": losses,
+            "first_loss": losses[0] if losses else float("nan"),
+            "last_loss": losses[-1] if losses else float("nan"),
+            "wall_s": time.time() - t_start,
+            "params": params,
+            "opt": opt_state,
+        }

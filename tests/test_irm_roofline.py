@@ -1,0 +1,103 @@
+"""IRM / roofline unit + property tests: ceiling geometry, bottleneck
+classification, term arithmetic."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paper_data
+from repro.core.hardware import MI100, TPU_V5E
+from repro.core.hlo_counters import Census
+from repro.core.irm import Ceiling, IRMPoint, gpu_irm, tpu_irm
+from repro.core.roofline import roofline_terms
+from repro.core.tpu_model import profile_from_census
+
+
+def _census(flops=1e12, hbm=1e11, wire=1e9):
+    c = Census()
+    c.flops = flops
+    c.mxu_flops = flops
+    c.hbm_bytes = hbm
+    c.mxu_issues = flops / (2 * 128 ** 3)
+    c.vpu_issues = 1e6
+    c.collectives["all-reduce"] = type(
+        "S", (), {"count": 1, "operand_bytes": wire, "wire_bytes": wire})()
+    return c
+
+
+def test_roofline_dominant_selection():
+    hw = TPU_V5E
+    # compute-heavy
+    t = roofline_terms("c", _census(flops=1e15, hbm=1e9, wire=1e6), hw, 1)
+    assert t.dominant == "compute"
+    # memory-heavy
+    t = roofline_terms("m", _census(flops=1e9, hbm=1e12, wire=1e6), hw, 1)
+    assert t.dominant == "memory"
+    # collective-heavy
+    t = roofline_terms("x", _census(flops=1e9, hbm=1e6, wire=1e12), hw, 1)
+    assert t.dominant == "collective"
+
+
+def test_roofline_terms_match_hand_math():
+    hw = TPU_V5E
+    t = roofline_terms("h", _census(flops=197e12, hbm=819e9, wire=200e9),
+                       hw, 1)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)          # 4 links x 50 GB/s
+
+
+def test_mfu_uses_model_flops():
+    hw = TPU_V5E
+    t = roofline_terms("u", _census(flops=197e12, hbm=1.0, wire=0.0), hw,
+                       n_devices=4, model_flops_total=4 * 98.5e12)
+    # modeled time 1s; useful flops per dev = 98.5e12 -> MFU 0.5
+    assert t.mfu_vs_peak == pytest.approx(0.5)
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_gpu_irm_geometry():
+    model = gpu_irm(MI100, [paper_data.LWFA_MI100])
+    knee = model.knee()
+    assert knee == pytest.approx(MI100.peak_gips()
+                                 / MI100.memory_ceiling_gbs())
+    # left of knee -> memory classified
+    p = model.points[0]
+    assert model.classify(p) == ("memory" if p.intensity < knee
+                                 else "compute")
+    # achieved point must sit under the binding roof
+    assert model.headroom(p) >= 1.0
+
+
+def test_tpu_irm_two_unit_ceilings():
+    c = _census()
+    prof = profile_from_census("k", c, TPU_V5E, runtime_s=1.0)
+    model = tpu_irm([prof])
+    labels = [ceil.label for ceil in model.ceilings]
+    assert any("MXU" in l for l in labels)
+    assert any("VPU" in l for l in labels)
+    assert len(model.points) == 2                       # MXU + VPU points
+
+
+@settings(max_examples=30, deadline=None)
+@given(flops=st.floats(1e6, 1e16), hbm=st.floats(1e3, 1e13),
+       wire=st.floats(0, 1e12))
+def test_roofline_properties(flops, hbm, wire):
+    """Invariants: modeled time == max term; fractions <= 1; achieved rates
+    never exceed peaks."""
+    hw = TPU_V5E
+    t = roofline_terms("p", _census(flops, hbm, wire), hw, 1)
+    assert t.modeled_time_s == pytest.approx(
+        max(t.compute_s, t.memory_s, t.collective_s))
+    assert max(t.compute_fraction, t.memory_fraction,
+               t.collective_fraction) == pytest.approx(1.0)
+    assert t.achieved_tflops * 1e12 <= hw.peak_flops_bf16 * 1.0001
+    assert t.achieved_gbs * 1e9 <= hw.memory_ceiling_gbs() * 1e9 * 1.0001
+
+
+@settings(max_examples=20, deadline=None)
+@given(intensity=st.floats(1e-6, 1e3))
+def test_irm_roof_is_min_of_ceilings(intensity):
+    model = gpu_irm(MI100, [paper_data.LWFA_MI100])
+    roof = model.roof_at(intensity)
+    for c in model.ceilings:
+        assert roof <= c.y_at(intensity) + 1e-9

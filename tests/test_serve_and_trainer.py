@@ -1,0 +1,103 @@
+"""Integration tests: serving engine generation and trainer
+checkpoint/restart determinism."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.data.pipeline import DataConfig
+from repro.models import get_model
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import ServeConfig, ServingEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def test_engine_greedy_deterministic(small_model):
+    model, params = small_model
+    eng = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=6,
+                      temperature=0.0)
+    engine = ServingEngine(model, params, eng)
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, model.cfg.vocab_size, size=7).astype(np.int32),
+               rng.randint(0, model.cfg.vocab_size, size=11).astype(np.int32)]
+    a = engine.generate_batch(prompts)
+    b = engine.generate_batch(prompts)
+    assert a == b
+    assert all(len(o) == 6 for o in a)
+    assert all(0 <= t < model.cfg.vocab_size for o in a for t in o)
+
+
+def test_engine_decode_matches_incremental_forward(small_model):
+    """Greedy engine output must equal naive re-forward generation."""
+    model, params = small_model
+    cfg = model.cfg
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab_size, size=9).astype(np.int32)
+
+    engine = ServingEngine(model, params,
+                           ServeConfig(max_batch=1, max_seq=32,
+                                       max_new_tokens=4, temperature=0.0))
+    fast = engine.generate_batch([prompt])[0]
+
+    # naive: re-run full prefill each step, take argmax
+    from repro.models import transformer as T
+    toks = list(prompt)
+    slow = []
+    for _ in range(4):
+        tk = jnp.asarray(np.asarray(toks)[None], jnp.int32)
+        pos = jnp.broadcast_to(jnp.arange(tk.shape[1])[None], tk.shape)
+        logits, _, _ = jax.jit(
+            lambda p, t, po: T.lm_forward(p, cfg, t, po, mode="train")
+        )(params, tk, pos)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        slow.append(nxt)
+        toks.append(nxt)
+    assert fast == slow
+
+
+def test_trainer_restart_resumes(tmp_path):
+    cfg = get("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    opt = AdamWConfig(lr=1e-3)
+
+    # run 1: 6 steps, checkpoint every 3, synchronous saves
+    t1 = Trainer(model, opt, data, TrainerConfig(
+        steps=6, checkpoint_every=3, checkpoint_dir=str(tmp_path),
+        log_every=1000, async_checkpoint=False, seed=7))
+    out1 = t1.run()
+
+    # run 2: restart from checkpoint at step 6, continue to 9
+    t2 = Trainer(model, opt, data, TrainerConfig(
+        steps=9, checkpoint_every=3, checkpoint_dir=str(tmp_path),
+        log_every=1000, async_checkpoint=False, seed=7))
+    out2 = t2.run()
+    assert len(out2["losses"]) == 3            # resumed at 6, ran 6..8
+
+    # run 3 (control): 9 straight steps from scratch, no checkpoints
+    t3 = Trainer(model, opt, data, TrainerConfig(
+        steps=9, checkpoint_dir=None, log_every=1000, seed=7))
+    out3 = t3.run()
+
+    # the resumed trajectory must match the straight-through one
+    np.testing.assert_allclose(out2["losses"], out3["losses"][6:],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_trainer_loss_decreases():
+    cfg = get("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    tr = Trainer(model, AdamWConfig(lr=3e-3), data,
+                 TrainerConfig(steps=25, checkpoint_dir=None, log_every=1000))
+    out = tr.run()
+    assert out["last_loss"] < out["first_loss"]

@@ -1,0 +1,85 @@
+"""BabelStream-TPU Pallas kernels vs jnp oracles: shape/dtype sweep +
+hypothesis property test (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.stream import ref, stream
+
+SHAPES = [(8, 128), (256, 512), (1024, 128), (64, 1024)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(shape, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return tuple(jax.random.normal(k, shape, dtype) for k in ks)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_copy(shape, dtype):
+    a, _, _ = _mk(shape, dtype)
+    got = stream.copy(a, block_rows=min(64, shape[0]), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.copy(a)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_mul(shape, dtype):
+    _, _, c = _mk(shape, dtype)
+    got = stream.mul(c, block_rows=min(64, shape[0]), interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.mul(c), np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_add(shape, dtype):
+    a, b, _ = _mk(shape, dtype)
+    got = stream.add(a, b, block_rows=min(64, shape[0]), interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.add(a, b), np.float32),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_triad(shape, dtype):
+    _, b, c = _mk(shape, dtype)
+    got = stream.triad(b, c, block_rows=min(64, shape[0]), interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.triad(b, c), np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dot(shape, dtype):
+    a, b, _ = _mk(shape, dtype)
+    got = stream.dot(a, b, block_rows=min(64, shape[0]), interpret=True)
+    want = ref.dot(a, b)
+    np.testing.assert_allclose(float(got), float(want), rtol=2e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(rows=st.sampled_from([8, 32, 128]),
+       cols=st.sampled_from([128, 384]),
+       block=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**30))
+def test_stream_property(rows, cols, block, seed):
+    """Any (rows % block == 0) decomposition must be exact for copy/add and
+    near-exact for dot."""
+    if rows % block:
+        block = rows
+    a, b, c = _mk((rows, cols), jnp.float32, seed)
+    np.testing.assert_array_equal(
+        np.asarray(stream.copy(a, block_rows=block, interpret=True)),
+        np.asarray(a))
+    np.testing.assert_allclose(
+        np.asarray(stream.add(a, b, block_rows=block, interpret=True)),
+        np.asarray(a + b), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(stream.dot(a, b, block_rows=block, interpret=True)),
+        float(ref.dot(a, b)), rtol=2e-3)

@@ -1,0 +1,208 @@
+"""Training substrate tests: optimizer math, checkpoint/restart (incl.
+corruption), data-pipeline determinism + straggler reassignment, gradient
+compression error-feedback, elastic batch replanning."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.optim.grad_compress import compress, decompress, ef_step
+from repro.optim.schedule import cosine_with_warmup, linear_warmup
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import replan_batch
+from repro.train.straggler import StragglerConfig, StragglerMonitor
+
+
+# --- AdamW ------------------------------------------------------------------
+
+def _ref_adamw_step(p, g, m, v, step, lr, b1, b2, eps, wd):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    return p - lr * (mh / (np.sqrt(vh) + eps) + wd * p), m, v
+
+
+def test_adamw_matches_reference():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.01,
+                      grad_clip_norm=None)
+    opt = AdamW(cfg)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]], jnp.float32)}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]], jnp.float32)}
+    state = opt.init(p)
+    new_p, new_state, _ = opt.update(g, state, p)
+
+    ref_p, ref_m, ref_v = _ref_adamw_step(
+        np.asarray(p["w"]), np.asarray(g["w"]),
+        np.zeros((2, 2)), np.zeros((2, 2)), 1, 1e-2, 0.9, 0.99, 1e-8, 0.01)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref_p, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_state["m"]["w"]), ref_m,
+                               rtol=1e-5)
+
+
+def test_adamw_grad_clip():
+    cfg = AdamWConfig(lr=1e-2, grad_clip_norm=1.0, weight_decay=0.0)
+    opt = AdamW(cfg)
+    p = {"w": jnp.zeros((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(p)
+    _, _, metrics = opt.update(g, state, p)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+@pytest.mark.parametrize("moment_dtype,tol", [
+    ("float32", 0.05), ("bfloat16", 0.08),
+    # int8 moments dither within ~2 lr of the optimum (quantization noise),
+    # but must not diverge
+    ("int8", 0.3),
+])
+def test_adamw_moment_dtypes_converge(moment_dtype, tol):
+    """Quadratic bowl: every moment precision must reach the optimum."""
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip_norm=None,
+                      moment_dtype=moment_dtype)
+    opt = AdamW(cfg)
+    p = {"w": jnp.asarray(np.linspace(-2, 2, 512), jnp.float32)}
+    state = opt.init(p)
+    for _ in range(150):
+        g = {"w": 2.0 * p["w"]}
+        p, state, _ = opt.update(g, state, p)
+    assert float(jnp.max(jnp.abs(p["w"]))) < tol
+
+
+def test_schedules():
+    lw = linear_warmup(1.0, 10)
+    assert float(lw(jnp.asarray(5))) == pytest.approx(0.5)
+    cw = cosine_with_warmup(1.0, 10, 100, min_ratio=0.1)
+    assert float(cw(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-5)
+
+
+# --- checkpointing ------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+             "b": {"c": jnp.ones((2,), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, state, {"data_step": 7})
+    got = ckpt.restore(str(tmp_path), state)
+    assert got is not None
+    step, restored, extra = got
+    assert step == 7 and extra["data_step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(state["a"]))
+
+
+def test_checkpoint_skips_partial(tmp_path):
+    state = {"a": jnp.ones((2, 2))}
+    ckpt.save(str(tmp_path), 5, state)
+    ckpt.save(str(tmp_path), 9, state)
+    # corrupt step 9: remove COMMIT
+    os.remove(os.path.join(str(tmp_path), "step_000000009", "COMMIT"))
+    got = ckpt.restore(str(tmp_path), state)
+    assert got is not None and got[0] == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"a": jnp.ones((3, 3))})
+
+
+def test_async_checkpointer(tmp_path):
+    c = ckpt.AsyncCheckpointer()
+    state = {"a": jnp.ones((64, 64))}
+    c.save(str(tmp_path), 3, state)
+    c.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+# --- data pipeline --------------------------------------------------------------
+
+def test_pipeline_deterministic_and_restartable():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8)
+    p1 = SyntheticTokenPipeline(cfg)
+    p2 = SyntheticTokenPipeline(cfg)
+    b1 = p1.batch_at(42)
+    b2 = p2.batch_at(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(43)["tokens"], b1["tokens"])
+    # labels are next tokens
+    assert b1["labels"].shape == (8, 16)
+
+
+def test_pipeline_host_sharding_disjoint():
+    kw = dict(vocab_size=1000, seq_len=8, global_batch=8, num_hosts=4)
+    batches = [SyntheticTokenPipeline(
+        DataConfig(host_index=h, **kw)).batch_at(0)["tokens"]
+        for h in range(4)]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(batches[i], batches[j])
+
+
+def test_pipeline_straggler_reassign():
+    kw = dict(vocab_size=1000, seq_len=8, global_batch=8, num_hosts=4)
+    slow = SyntheticTokenPipeline(DataConfig(host_index=2, **kw))
+    spare = SyntheticTokenPipeline(DataConfig(host_index=3, **kw))
+    spare.reassign(slow_host=2, spare_host=3)
+    np.testing.assert_array_equal(spare.batch_at(10)["tokens"],
+                                  slow.batch_at(10)["tokens"])
+
+
+def test_pipeline_prefetch_iterator():
+    cfg = DataConfig(vocab_size=100, seq_len=4, global_batch=2)
+    p = SyntheticTokenPipeline(cfg)
+    it = p.iterator(start_step=5)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], p.batch_at(5)["tokens"])
+    p.close()
+
+
+# --- straggler monitor -----------------------------------------------------------
+
+def test_straggler_flagging():
+    mon = StragglerMonitor(4, StragglerConfig(alpha=1.0, threshold=1.5,
+                                              patience=2))
+    base = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    assert mon.update(base) == []
+    slow = {**base, 2: 5.0}
+    assert mon.update(slow) == []          # strike 1
+    assert mon.update(slow) == [2]         # strike 2 -> flagged
+    mon.reset(2)
+    assert mon.update(base) == []
+
+
+# --- gradient compression ---------------------------------------------------------
+
+def test_compress_roundtrip_accuracy():
+    x = jnp.asarray(np.random.RandomState(0).randn(1000), jnp.float32)
+    q, s = compress(x)
+    y = decompress(q, s, x.shape)
+    assert float(jnp.max(jnp.abs(x - y))) < float(jnp.max(jnp.abs(x))) / 100
+
+
+def test_error_feedback_unbiased():
+    """EF invariant: sum of dequantized grads ~= sum of true grads."""
+    rng = np.random.RandomState(1)
+    residual = jnp.zeros((512,), jnp.float32)
+    total_true = np.zeros((512,))
+    total_sent = np.zeros((512,))
+    for _ in range(50):
+        g = jnp.asarray(rng.randn(512) * 0.1, jnp.float32)
+        q, s, residual, deq = ef_step(g, residual)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(deq)
+    # residual bounds the cumulative error
+    np.testing.assert_allclose(total_sent + np.asarray(residual), total_true,
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- elastic -----------------------------------------------------------------------
+
+def test_replan_batch_constant_global():
+    for world in (2, 4, 8, 16):
+        plan = replan_batch(256, world, max_per_shard=16)
+        assert plan.per_step_batch == 256
+        assert plan.per_shard_batch <= 16
