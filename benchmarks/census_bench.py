@@ -1,0 +1,52 @@
+"""HLO-census micro-benchmark: time ``census_from_text`` on a large
+post-optimization module (a reduced-model fused decode program — hundreds of
+fusions, scan bodies, dynamic-slice cache traffic).
+
+The census is on the dry-run critical path (every (arch x shape x mesh) cell
+parses its HLO text), so its throughput is tracked here like any kernel."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _large_hlo_text() -> str:
+    from repro.configs import get
+    from repro.models import get_model
+    cfg = get("granite-8b").reduced()
+    model = get_model(cfg)
+    B, T, steps = 4, 64, 8
+
+    def fused(params, tok, cache, key):
+        return model.decode_many(params, tok, cache, key, num_steps=steps)
+
+    key = jax.random.key(0)
+    lowered = jax.jit(fused).lower(
+        model.abstract_params(),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        model.abstract_cache(B, T),
+        jax.ShapeDtypeStruct(key.shape, key.dtype))
+    return lowered.compile().as_text()
+
+
+def bench() -> List[str]:
+    from repro.core.hlo_counters import census_from_text
+    text = _large_hlo_text()
+    census_from_text(text)                       # warm (regex caches)
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        census = census_from_text(text)
+    dt = (time.perf_counter() - t0) / reps
+    n_lines = text.count("\n")
+    return [f"hlo_census/decode_many-{n_lines}l,{dt*1e6:.0f},"
+            f"insts={census.total_instructions:.0f},"
+            f"lines_per_s={n_lines/dt:.0f}"]
+
+
+if __name__ == "__main__":
+    for line in bench():
+        print(line)

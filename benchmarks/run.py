@@ -10,9 +10,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (babelstream, kernel_adjusted, membench,
-                            paper_rooflines, paper_tables, roofline_sweep,
-                            serve_bench, train_bench)
+    from benchmarks import (babelstream, census_bench, kernel_adjusted,
+                            membench, paper_rooflines, paper_tables,
+                            roofline_sweep, serve_bench, train_bench)
     modules = [
         ("paper_tables", paper_tables),
         ("paper_rooflines", paper_rooflines),
@@ -20,6 +20,7 @@ def main() -> None:
         ("membench", membench),
         ("roofline_sweep", roofline_sweep),
         ("kernel_adjusted", kernel_adjusted),
+        ("census_bench", census_bench),
         ("train_bench", train_bench),
         ("serve_bench", serve_bench),
     ]

@@ -1,27 +1,105 @@
 """Serving micro-benchmark: batched decode throughput at smoke scale (the
-decode_32k cells' runnable counterpart)."""
+decode_32k cells' runnable counterpart).
+
+Reports the fused device-resident ``decode_many`` loop against the legacy
+per-token host loop (both with donated caches), plus the continuous-batching
+engine's end-to-end tokens/s.  ``--json`` writes BENCH_serve.json so the
+perf trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
+import numpy as np
 
-from repro.configs import get
-from repro.models import get_model
-from repro.serve.engine import ServeConfig, ServingEngine
+SMOKE = dict(arch="granite-8b", batch=4, seq=128, steps=8)
+
+
+def _engine():
+    from repro.configs import get
+    from repro.models import get_model
+    from repro.serve.engine import ServeConfig, ServingEngine
+    cfg = get(SMOKE["arch"]).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params,
+                        ServeConfig(max_batch=SMOKE["batch"],
+                                    max_seq=SMOKE["seq"]))
+    return cfg, model, params, eng
+
+
+def run() -> Dict[str, float]:
+    cfg, model, params, eng = _engine()
+    stats = dict(eng.benchmark_decode(batch=SMOKE["batch"], seq=SMOKE["seq"],
+                                      steps=SMOKE["steps"]))
+
+    # continuous batching end-to-end: 2x batch requests over batch slots
+    from repro.serve.engine import ContinuousBatchingEngine, ServeConfig
+    cbe = ContinuousBatchingEngine(
+        model, params, ServeConfig(max_batch=SMOKE["batch"], max_seq=256,
+                                   max_new_tokens=8))
+    rng = np.random.RandomState(0)
+    for _ in range(2 * SMOKE["batch"]):
+        cbe.submit(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32))
+    cbe.step()                                   # compile
+    t0 = time.perf_counter()
+    results = cbe.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    stats["continuous_tokens_per_s"] = n_tok / max(dt, 1e-9)
+    stats["continuous_joins"] = float(cbe.joins)
+    return stats
+
+
+def bench_lines_from(stats: Dict[str, float]) -> List[str]:
+    name = f"serve/{SMOKE['arch']}-reduced-decode"
+    return [
+        f"{name},{stats['s_per_step_fused']*1e6:.0f},"
+        f"tokens_per_s={stats['tokens_per_s_fused']:.1f}",
+        f"{name}-legacy-loop,{stats['s_per_step_loop']*1e6:.0f},"
+        f"tokens_per_s={stats['tokens_per_s_loop']:.1f}",
+        f"{name}-fused-speedup,0,x{stats['fused_speedup']:.2f}",
+        f"serve/continuous-batching,0,"
+        f"tokens_per_s={stats['continuous_tokens_per_s']:.1f}",
+    ]
 
 
 def bench() -> List[str]:
-    cfg = get("granite-8b").reduced()
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0))
-    eng = ServingEngine(model, params, ServeConfig(max_batch=4, max_seq=128))
-    stats = eng.benchmark_decode(batch=4, seq=128, steps=8)
-    return [f"serve/granite-8b-reduced-decode,{stats['s_per_step']*1e6:.0f},"
-            f"tokens_per_s={stats['tokens_per_s']:.1f}"]
+    return bench_lines_from(run())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serve.json next to the repo root")
+    args = ap.parse_args()
+    stats = run()
+    for line in bench_lines_from(stats):
+        print(line)
+    if args.json:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serve.json")
+        record = {
+            "config": SMOKE,
+            "backend": jax.default_backend(),
+            "s_per_step_fused": stats["s_per_step_fused"],
+            "s_per_step_loop": stats["s_per_step_loop"],
+            "tokens_per_s_fused": stats["tokens_per_s_fused"],
+            "tokens_per_s_loop": stats["tokens_per_s_loop"],
+            "fused_speedup": stats["fused_speedup"],
+            "continuous_tokens_per_s": stats["continuous_tokens_per_s"],
+        }
+        with open(os.path.abspath(path), "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[serve_bench] wrote {os.path.abspath(path)}")
+    return 0
 
 
 if __name__ == "__main__":
-    for line in bench():
-        print(line)
+    import sys
+    sys.exit(main())

@@ -34,6 +34,7 @@ import dataclasses
 import math
 import re
 from collections import Counter
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
@@ -85,8 +86,11 @@ class Shape:
                    * math.ceil(self.dims[-1] / lane))
 
 
-def parse_shapes(text: str) -> List[Shape]:
-    """All shapes appearing in a type string (handles tuples)."""
+@lru_cache(maxsize=65536)
+def _parse_shapes_cached(text: str) -> Tuple[Shape, ...]:
+    """Type strings repeat heavily across a module (every scan iteration,
+    every fusion parameter re-states the same tuple type) — cache the parse
+    instead of re-running the regex + int conversion per use."""
     out = []
     for dtype, dims in _SHAPE_RE.findall(text):
         if dtype in ("token", "opaque"):
@@ -96,7 +100,12 @@ def parse_shapes(text: str) -> List[Shape]:
             continue
         dims_t = tuple(int(d) for d in dims.split(",") if d) if dims else ()
         out.append(Shape(dtype, dims_t))
-    return out
+    return tuple(out)
+
+
+def parse_shapes(text: str) -> List[Shape]:
+    """All shapes appearing in a type string (handles tuples)."""
+    return list(_parse_shapes_cached(text))
 
 
 def shapes_bytes(shapes: Sequence[Shape]) -> float:
@@ -123,6 +132,10 @@ class Computation:
     name: str
     instructions: Dict[str, Instruction]
     order: List[Instruction]
+    _users: Optional[Dict[str, List[Instruction]]] = \
+        dataclasses.field(default=None, repr=False)
+    _params: Optional[Dict[str, Instruction]] = \
+        dataclasses.field(default=None, repr=False)
 
     @property
     def root(self) -> Optional[Instruction]:
@@ -130,6 +143,24 @@ class Computation:
             if inst.is_root:
                 return inst
         return self.order[-1] if self.order else None
+
+    def users_of(self, name: str) -> List[Instruction]:
+        """Downstream users, via a lazily-built one-pass index (the naive
+        per-query scan is O(insts) and the fusion byte accounting queries
+        it per parameter)."""
+        if self._users is None:
+            users: Dict[str, List[Instruction]] = {}
+            for inst in self.order:
+                for op in inst.operands:
+                    users.setdefault(op, []).append(inst)
+            self._users = users
+        return self._users.get(name, [])
+
+    def param_named(self, index: int) -> Optional[Instruction]:
+        if self._params is None:
+            self._params = {i.args_raw.strip(): i for i in self.order
+                            if i.opcode == "parameter"}
+        return self._params.get(str(index))
 
 
 _COMP_HEADER_RE = re.compile(
@@ -149,6 +180,9 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 
 
+_TYPE_TOKEN_RE = re.compile(r"[a-z]\w*(\[[^\]]*\])?(\{[^}]*\})?")
+
+
 def _split_type(rest: str) -> Tuple[str, str]:
     """Split 'TYPE opcode(...)' into (type_str, remainder)."""
     if rest.startswith("("):
@@ -161,7 +195,7 @@ def _split_type(rest: str) -> Tuple[str, str]:
                 if depth == 0:
                     return rest[: i + 1], rest[i + 1:].lstrip()
         return rest, ""
-    m = re.match(r"[a-z]\w*(\[[^\]]*\])?(\{[^}]*\})?", rest)
+    m = _TYPE_TOKEN_RE.match(rest)
     if not m:
         return "", rest
     return m.group(0), rest[m.end():].lstrip()
@@ -211,7 +245,7 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
         operands = tuple(_OPERAND_RE.findall(args))
         inst = Instruction(
             name=name, opcode=opcode,
-            shapes=tuple(parse_shapes(type_str)),
+            shapes=_parse_shapes_cached(type_str),
             operands=operands, attrs=after, args_raw=args,
             is_root=is_root)
         cur.instructions[name] = inst
@@ -418,7 +452,7 @@ def _through_users(fcomp: Computation, name: str):
     users, e.g. ``convert -> {dynamic-slice, dynamic-update-slice}`` in the
     decode-cache pattern); returns the non-transparent terminal users."""
     out = []
-    frontier = [i for i in fcomp.order if name in i.operands]
+    frontier = list(fcomp.users_of(name))
     seen = set()
     while frontier:
         u = frontier.pop()
@@ -426,7 +460,7 @@ def _through_users(fcomp: Computation, name: str):
             continue
         seen.add(u.name)
         if u.opcode in _TRANSPARENT:
-            nxt = [i for i in fcomp.order if u.name in i.operands]
+            nxt = fcomp.users_of(u.name)
             if not nxt:
                 out.append((u, u))
             else:
@@ -451,12 +485,8 @@ def _fusion_param_read_bytes(fcomp: Computation, param_index: int,
                              full: Shape) -> float:
     """Slice-aware read size of one fusion parameter (sees through
     convert/bitcast/copy chains)."""
-    pname = None
-    for inst in fcomp.order:
-        if (inst.opcode == "parameter"
-                and inst.args_raw.strip() == str(param_index)):
-            pname = inst.name
-            break
+    pinst = fcomp.param_named(param_index)
+    pname = pinst.name if pinst is not None else None
     if pname is None:
         return full.bytes
     finals = _through_users(fcomp, pname)

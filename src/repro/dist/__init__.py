@@ -1,0 +1,2 @@
+from repro.dist.sharding import (  # noqa: F401
+    MeshRules, active_rules, constrain, current_mesh, set_context, use_mesh)

@@ -1,0 +1,139 @@
+"""Logical-axis sharding: one place maps logical names to mesh axes.
+
+Parameters, caches and activations declare LOGICAL axes ("batch", "model",
+"fsdp", "cache_seq", "ep", "moe_fsdp"); ``MeshRules`` resolves them to the
+physical mesh axes of the active mesh.  The same model code then runs
+unsharded on one CPU device (no mesh -> every constraint is a no-op) and
+SPMD-partitioned on a production mesh (dryrun.py picks rules per cell).
+
+``constrain`` is the only sharding primitive model code uses: it applies
+``with_sharding_constraint`` with the resolved spec, silently replicating
+any dimension a mesh axis does not divide (reduced smoke shapes).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[str, ...]
+
+
+def _entry(axes: Axes):
+    """PartitionSpec entry for a (possibly empty / multi) axis tuple."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axis mapping for one (shape x mesh) cell."""
+
+    batch_axes: Axes = ()            # data-parallel axes for batch dims
+    fsdp_axes: Axes = ()             # weight-shard axes (ZeRO-3 style)
+    cache_seq_axes: Axes = ()        # KV-cache sequence sharding (decode)
+    ep_axes: Axes = ("model",)       # expert-parallel axes (MoE blocks)
+    model_axis: str = "model"        # tensor-parallel axis
+    use_fsdp: bool = True
+
+    def resolve(self, name: Optional[str]):
+        if name is None:
+            return None
+        if name == "batch":
+            return _entry(self.batch_axes)
+        if name == "model":
+            return self.model_axis
+        if name == "fsdp":
+            return _entry(self.fsdp_axes) if self.use_fsdp else None
+        if name == "cache_seq":
+            return _entry(self.cache_seq_axes)
+        if name == "ep":
+            return _entry(self.ep_axes)
+        if name == "moe_fsdp":
+            # fsdp axes not already consumed by expert parallelism
+            if not self.use_fsdp:
+                return None
+            return _entry(tuple(a for a in self.fsdp_axes
+                                if a not in self.ep_axes))
+        raise ValueError(f"unknown logical axis {name!r}")
+
+
+# --- active context -----------------------------------------------------------
+# Thread-local so parallel compiles (e.g. pytest-xdist style runners) cannot
+# race each other's mesh.
+
+class _Context(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[MeshRules] = None
+
+
+_CTX = _Context()
+
+
+def set_context(mesh: Optional[Mesh], rules: Optional[MeshRules]) -> None:
+    """Install mesh + rules for the rest of the process (launchers)."""
+    _CTX.mesh = mesh
+    _CTX.rules = rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> Optional[MeshRules]:
+    return _CTX.rules
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: MeshRules):
+    """Scoped mesh + rules (dryrun cells, multi-device tests)."""
+    prev = (_CTX.mesh, _CTX.rules)
+    set_context(mesh, rules)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_context(*prev)
+
+
+# --- the one sharding primitive model code uses --------------------------------
+
+def _validated(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate dims a mesh axis does not divide (reduced smoke shapes) —
+    with_sharding_constraint requires exact divisibility."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape.get(a, 1)
+        out.append(entry if size and shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names; no-op without an
+    active mesh.  Axis names missing from the mesh or not dividing the dim
+    fall back to replicated."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return x
+    entries = []
+    for name in logical_axes:
+        e = rules.resolve(name)
+        if isinstance(e, tuple):
+            e = _entry(tuple(a for a in e if a in mesh.shape))
+        elif e is not None and e not in mesh.shape:
+            e = None
+        entries.append(e)
+    spec = _validated(P(*entries), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,27 @@
+"""Shared block-size fallback for Pallas grids.
+
+Pallas BlockSpecs need a block size that divides the array dim exactly;
+odd-shaped inputs (BabelStream sweeps, arbitrary max_seq caches) must fall
+back to a smaller block instead of crashing.  One helper, parameterized by
+the hardware alignment preference (lanes for kv tiles, sublanes for
+row-blocked streams), so the divisor-search logic lives in exactly one
+place.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def largest_divisor_block(total: int, block: int,
+                          aligns: Tuple[int, ...] = (8, 1)) -> int:
+    """Largest divisor of ``total`` that is <= ``block``, preferring
+    multiples of each alignment in ``aligns`` order (e.g. (128, 8, 1) for
+    lane-major tiles, (8, 1) for sublane row blocks)."""
+    hi = max(1, min(block, total))
+    if total % hi == 0:
+        return hi
+    for align in aligns:
+        for c in range(hi - hi % align, 0, -align):
+            if c and total % c == 0:
+                return c
+    return 1

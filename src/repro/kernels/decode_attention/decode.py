@@ -1,0 +1,138 @@
+"""Single-token decode attention as a Pallas TPU kernel.
+
+The serving decode hot path: one new query per slot attends over that slot's
+rows of the (B, T, KV, D) batched KV cache.  The cache never leaves HBM
+wholesale — it is streamed through VMEM in (block_kv x D) tiles, D padded to
+128 lanes, so every transaction the instruction roofline sees is
+(8,128)-aligned (the paper's strided-access lesson, section 5.2).
+
+Shape strategy vs the prefill flash kernel:
+
+  * grid = (B, KV, num_kv_blocks) — kv blocks are the MINOR axis, so the
+    online-softmax state for one (slot, kv-head) lives in VMEM scratch
+    across the kv sweep (TPU grids execute sequentially per core).
+  * GQA WITHOUT materializing repeated kv heads: q is reshaped to
+    (B, KV, G, D) and each grid step processes the whole G-row group of
+    one kv head against one (block_kv, D) cache tile — the MXU pass is
+    [G, D] x [D, block_kv].
+  * ``kv_len`` / per-slot ``start`` arrive via scalar prefetch (SMEM):
+    dead blocks (entirely outside [start[b], kv_len)) are skipped with
+    ``pl.when`` — no FLOPs or VMEM traffic issued — and the boundary
+    blocks apply an elementwise position mask.
+
+Inference-only: no VJP (the jnp reference in models/attention.py carries
+gradients where needed).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.blocks import largest_divisor_block
+
+NEG_INF = -1e30
+
+
+def pick_block(total: int, block: int) -> int:
+    """Largest divisor of ``total`` that is <= ``block``, preferring
+    lane/sublane-aligned sizes (multiples of 128, then 8)."""
+    return largest_divisor_block(total, block, aligns=(128, 8, 1))
+
+
+def _kernel(kvlen_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, block_kv: int,
+            num_kv: int):
+    b = pl.program_id(0)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kvlen_ref[0]
+    start = start_ref[b]
+    # block is live iff it overlaps the slot's window [start, kv_len)
+    run = (kj * block_kv < kv_len) & ((kj + 1) * block_kv > start)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bkv, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bkv)
+        tpos = kj * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where((tpos < kv_len) & (tpos >= start), s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array,
+                         kv_start: Optional[jax.Array] = None, *,
+                         block_kv: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q (B, 1, H, D); k, v (B, T, KV, D); kv_len scalar int32 (positions
+    >= kv_len are masked); kv_start (B,) int32 or None (positions <
+    kv_start[b] are masked).  Returns (B, 1, H, D)."""
+    B, S, H, D = q.shape
+    assert S == 1, "decode kernel is single-token"
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bkv = pick_block(T, block_kv)
+    num_kv = T // bkv
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, KV, G, D)                  # kv-major head grouping
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    if kv_start is None:
+        kv_start = jnp.zeros((B,), jnp.int32)
+    start_arr = jnp.asarray(kv_start, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_kernel, scale=scale, block_kv=bkv,
+                               num_kv=num_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, num_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, bkv, 1, D), lambda b, h, j, *_: (b, j, h, 0)),
+                pl.BlockSpec((1, bkv, 1, D), lambda b, h, j, *_: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),     # running row max
+                pltpu.VMEM((G, 1), jnp.float32),     # running row sum
+                pltpu.VMEM((G, D), jnp.float32),     # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(kv_len_arr, start_arr, qg, k, v)
+    return out.reshape(B, 1, H, D)

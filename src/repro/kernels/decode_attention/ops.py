@@ -1,0 +1,30 @@
+"""Dispatch wrapper for the Pallas decode-attention kernel.
+
+Runs the real kernel on TPU and interpret mode elsewhere (CPU smoke/tests).
+Called from inside the jitted decode step (transformer.attn_decode when
+``cfg.attention_impl == "pallas"``), so no jit wrapper here.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention import decode as _decode
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len, kv_start: Optional[jax.Array] = None,
+                     block_kv: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, 1, H, D); k, v (B, T, KV, D); kv_len scalar; kv_start (B,) or
+    None.  Returns (B, 1, H, D)."""
+    return _decode.decode_attention_fwd(
+        q, k, v, kv_len, kv_start, block_kv=block_kv,
+        interpret=_auto_interpret(interpret))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the Pallas decode-attention kernel: the direct
+softmax attention with kv_len / kv_start window masking
+(repro.models.attention.direct_attention) — interpret-mode tests assert the
+kernel matches it bit-for-bit in fp32."""
+from typing import Optional
+
+import jax
+
+from repro.models.attention import direct_attention
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len, kv_start: Optional[jax.Array] = None
+                         ) -> jax.Array:
+    """q (B, 1, H, D); k, v (B, T, KV, D).  Returns (B, 1, H, D)."""
+    kv_len_m1 = kv_len - 1
+    return direct_attention(q, k, v, causal=True, q_offset=kv_len_m1,
+                            kv_len=kv_len, kv_start=kv_start)

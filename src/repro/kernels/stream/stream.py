@@ -26,13 +26,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.blocks import largest_divisor_block
+
 BLOCK_ROWS = 256          # x 512 lanes x 4B = 512 KiB per operand block
 
 
+def _block_rows(rows: int, block_rows: int) -> int:
+    """Largest divisor of ``rows`` <= ``block_rows`` (prefer 8-sublane
+    multiples) — odd-shaped arrays fall back to a smaller block instead of
+    crashing the BabelStream sweep."""
+    return largest_divisor_block(rows, block_rows, aligns=(8, 1))
+
+
 def _grid(shape, block_rows):
-    rows = shape[0]
-    assert rows % block_rows == 0, (rows, block_rows)
-    return (rows // block_rows,)
+    """``block_rows`` is an already-resolved divisor (callers go through
+    ``_block_rows``)."""
+    return (shape[0] // block_rows,)
 
 
 def _bspec(block_rows, cols):
@@ -74,7 +83,7 @@ def _dot_kernel(a_ref, b_ref, acc_ref):
 def copy(a: jax.Array, *, block_rows: int = BLOCK_ROWS,
          interpret: bool = False) -> jax.Array:
     rows, cols = a.shape
-    br = min(block_rows, rows)
+    br = _block_rows(rows, block_rows)
     return pl.pallas_call(
         _copy_kernel,
         grid=_grid(a.shape, br),
@@ -88,7 +97,7 @@ def copy(a: jax.Array, *, block_rows: int = BLOCK_ROWS,
 def mul(c: jax.Array, scalar: float = 0.4, *,
         block_rows: int = BLOCK_ROWS, interpret: bool = False) -> jax.Array:
     rows, cols = c.shape
-    br = min(block_rows, rows)
+    br = _block_rows(rows, block_rows)
     return pl.pallas_call(
         functools.partial(_mul_kernel, scalar=scalar),
         grid=_grid(c.shape, br),
@@ -102,7 +111,7 @@ def mul(c: jax.Array, scalar: float = 0.4, *,
 def add(a: jax.Array, b: jax.Array, *, block_rows: int = BLOCK_ROWS,
         interpret: bool = False) -> jax.Array:
     rows, cols = a.shape
-    br = min(block_rows, rows)
+    br = _block_rows(rows, block_rows)
     return pl.pallas_call(
         _add_kernel,
         grid=_grid(a.shape, br),
@@ -116,7 +125,7 @@ def add(a: jax.Array, b: jax.Array, *, block_rows: int = BLOCK_ROWS,
 def triad(b: jax.Array, c: jax.Array, scalar: float = 0.4, *,
           block_rows: int = BLOCK_ROWS, interpret: bool = False) -> jax.Array:
     rows, cols = b.shape
-    br = min(block_rows, rows)
+    br = _block_rows(rows, block_rows)
     return pl.pallas_call(
         functools.partial(_triad_kernel, scalar=scalar),
         grid=_grid(b.shape, br),
@@ -130,7 +139,7 @@ def triad(b: jax.Array, c: jax.Array, scalar: float = 0.4, *,
 def dot(a: jax.Array, b: jax.Array, *, block_rows: int = BLOCK_ROWS,
         interpret: bool = False) -> jax.Array:
     rows, cols = a.shape
-    br = min(block_rows, rows)
+    br = _block_rows(rows, block_rows)
     out = pl.pallas_call(
         _dot_kernel,
         grid=_grid(a.shape, br),

@@ -1,6 +1,9 @@
 """Serving launcher: production mesh + batched engine.
 
-On this container run --local-smoke (reduced config, real engine).
+On this container run --local-smoke (reduced config, real engine).  The
+decode hot path is the fused device-resident ``decode_many`` loop
+(--legacy-loop falls back to the per-token host loop for comparison);
+--continuous exercises the slot-scheduled continuous-batching engine.
 """
 import argparse
 import sys
@@ -14,27 +17,55 @@ def main() -> int:
     ap.add_argument("--local-smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="per-token host loop instead of fused decode_many")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-scheduled continuous batching demo "
+                         "(submits 2x batch requests over batch slots)")
     args = ap.parse_args()
 
     import jax
     from repro import configs
     from repro.models import get_model
-    from repro.serve.engine import ServeConfig, ServingEngine
+    from repro.serve.engine import (
+        ContinuousBatchingEngine, ServeConfig, ServingEngine)
 
     cfg = configs.get(args.arch)
     if args.local_smoke:
         cfg = cfg.reduced()
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServingEngine(model, params, ServeConfig(
-        max_batch=args.batch, max_seq=128,
-        max_new_tokens=args.new_tokens))
+    # continuous mode runs 2x batch requests through batch slots in
+    # lockstep: two admission waves of (prompt<=16 + new_tokens) shared
+    # cache positions each — size max_seq for the requested workload
+    # instead of crashing on cache exhaustion for large --new-tokens
+    max_seq = max(128, 2 * (16 + args.new_tokens) + 16)
+    scfg = ServeConfig(max_batch=args.batch, max_seq=max_seq,
+                       max_new_tokens=args.new_tokens,
+                       temperature=args.temperature,
+                       fused=not args.legacy_loop)
     rng = np.random.RandomState(0)
+
+    if args.continuous:
+        engine = ContinuousBatchingEngine(model, params, scfg)
+        rids = [engine.submit(
+            rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)
+                        ).astype(np.int32)) for _ in range(2 * args.batch)]
+        results = engine.run()
+        print(f"[launch.serve] continuous: {len(results)} requests, "
+              f"{sum(len(results[r]) for r in rids)} tokens, "
+              f"{engine.joins} joins over {args.batch} slots in "
+              f"{engine.steps_run} steps")
+        return 0
+
+    engine = ServingEngine(model, params, scfg)
     prompts = [rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)
                            ).astype(np.int32) for _ in range(args.batch)]
     outs = engine.generate_batch(prompts)
+    mode = "legacy per-token loop" if args.legacy_loop else "fused decode_many"
     print(f"[launch.serve] generated {sum(len(o) for o in outs)} tokens "
-          f"across {len(outs)} requests")
+          f"across {len(outs)} requests ({mode})")
     return 0
 
 

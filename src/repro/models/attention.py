@@ -33,12 +33,16 @@ def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
 def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      causal: bool,
                      q_offset: Optional[jax.Array] = None,
-                     kv_len: Optional[jax.Array] = None) -> jax.Array:
+                     kv_len: Optional[jax.Array] = None,
+                     kv_start: Optional[jax.Array] = None) -> jax.Array:
     """Materializes (B, KV, G, S, T) scores — fine for decode (S == 1) and
     smoke shapes.  GQA/MQA via grouped einsums: the kv heads are NEVER
     materialized repeated (repeating a 32k MQA cache to 48 heads costs
     ~3 GB/layer).  ``q_offset`` is the absolute position of q[0] (decode);
-    ``kv_len`` masks cache positions >= kv_len."""
+    ``kv_len`` masks cache positions >= kv_len; ``kv_start`` (B,) masks
+    cache positions < kv_start[b] — the per-slot window of the
+    continuous-batching engine (a slot joining mid-flight must not attend
+    to the previous occupant's KV rows)."""
     B, S, H, D = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -55,6 +59,9 @@ def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         s = jnp.where(mask[None, None, None], s, NEG_INF)
     if kv_len is not None:
         s = jnp.where((tpos < kv_len)[None, None, None, None], s, NEG_INF)
+    if kv_start is not None:
+        live = tpos[None, :] >= kv_start[:, None]            # (B, T)
+        s = jnp.where(live[:, None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
     return out.reshape(B, S, H, D).astype(q.dtype)
@@ -127,7 +134,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
     T = k.shape[1]
     if impl == "pallas" and S > 1 and kv_len is None:
         from repro.kernels.flash_attention import ops as flash_ops
-        return flash_ops.flash_attention(q, k, v, causal=causal)
+        return flash_ops.flash_attention(q, repeat_kv(k, H), repeat_kv(v, H),
+                                         causal=causal)
     if S == 1 or (S * T <= chunk_q * chunk_kv) or kv_len is not None:
         return direct_attention(q, k, v, causal, q_offset, kv_len)
     from repro.models.flash import flash_attention_ref

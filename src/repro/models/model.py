@@ -18,6 +18,21 @@ from repro.models.params import (
     ParamDecl, abstract_params, init_params, param_pspecs)
 
 
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float):
+    """Greedy/temperature sampling step: returns (tokens (B,) int32, key).
+
+    THE one sampler — the fused decode_many scan, the legacy per-token
+    loop, and the continuous-batching engine step all call this, so the
+    key-split discipline stays identical and the three paths remain
+    token-identical for a given seed (tests assert it)."""
+    if temperature > 0:
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    return tok.astype(jnp.int32), key
+
+
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     """logits (B, S, V) fp32; labels (B, S) int32. Mean NLL."""
     logits = logits.astype(jnp.float32)
@@ -126,6 +141,40 @@ class Model:
             cfg2 = dataclasses.replace(cfg, embed_inputs=True)
             return T.lm_decode(params, cfg2, tokens, cache)
         return T.lm_decode(params, cfg, tokens, cache)
+
+    def decode_many(self, params, tokens, cache, key, num_steps: int,
+                    temperature: float = 0.0, eos_id: int = -1,
+                    pad_id: int = 0):
+        """Fused multi-token decode: one compiled ``lax.scan`` over
+        ``num_steps`` decode steps with ON-DEVICE sampling and per-slot stop
+        conditions — no host round-trip per token, and (jitted with
+        ``donate_argnums``) the KV cache is updated in place instead of
+        re-materialized every step.
+
+        tokens (B, 1) int32 — the last already-sampled token per slot.
+        key — sampler PRNG key (carried and split per step; unused when
+        ``temperature <= 0``).  ``eos_id < 0`` disables stop conditions.
+        Finished slots keep advancing the cache in lockstep but emit
+        ``pad_id`` (their output is frozen).
+
+        Returns (out_tokens (num_steps, B) int32, cache, key, done (B,)).
+        """
+        B = tokens.shape[0]
+        done0 = (tokens[:, 0] == eos_id) if eos_id >= 0 else \
+            jnp.zeros((B,), bool)
+
+        def step(carry, _):
+            tok, cache, key, done = carry
+            logits, cache = self.decode_step(params, tok, cache)
+            nxt, key = sample_token(logits, key, temperature)
+            nxt = jnp.where(done, jnp.int32(pad_id), nxt)
+            if eos_id >= 0:
+                done = done | (nxt == eos_id)
+            return (nxt[:, None], cache, key, done), nxt
+
+        (_, cache, key, done), toks = jax.lax.scan(
+            step, (tokens, cache, key, done0), None, length=num_steps)
+        return toks, cache, key, done
 
     # -- AOT input specs -------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:

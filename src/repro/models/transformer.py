@@ -222,9 +222,11 @@ def attn_apply(h, p, cfg: ArchConfig, rope, causal=True):
     return constrain(out, "batch", None, None), (k, v)
 
 
-def attn_decode(h, p, cfg: ArchConfig, rope, k_cache, v_cache, pos):
+def attn_decode(h, p, cfg: ArchConfig, rope, k_cache, v_cache, pos,
+                start=None):
     """decode path: h (B, 1, d); k_cache/v_cache (B, T, KV, hd); updates at
-    ``pos`` and attends over [0, pos]."""
+    ``pos`` and attends over [start[b], pos] (``start`` is the per-slot
+    window base of the continuous-batching engine, None -> 0)."""
     hn = apply_norm(h, p["ln1"], cfg)
     a = p["attn"]
     q, k, v = _qkv(hn, a, cfg, rope, decode=True)
@@ -236,8 +238,13 @@ def attn_decode(h, p, cfg: ArchConfig, rope, k_cache, v_cache, pos):
     # this GSPMD may replicate the updated cache across the model axis
     k_cache = constrain(k_cache, "batch", "cache_seq", None, None)
     v_cache = constrain(v_cache, "batch", "cache_seq", None, None)
-    out = direct_attention(q, k_cache, v_cache, causal=True,
-                           q_offset=pos, kv_len=pos + 1)
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.decode_attention.ops import decode_attention
+        out = decode_attention(q, k_cache, v_cache, kv_len=pos + 1,
+                               kv_start=start)
+    else:
+        out = direct_attention(q, k_cache, v_cache, causal=True,
+                               q_offset=pos, kv_len=pos + 1, kv_start=start)
     B = h.shape[0]
     out = dense(out.reshape(B, 1, -1), a["wo"])
     return out, k_cache, v_cache
@@ -283,8 +290,9 @@ def shared_attn_block(h, p, cfg: ArchConfig, rope):
     return constrain(h, "batch", None, None), kv
 
 
-def shared_attn_decode(h, p, cfg: ArchConfig, rope, k_c, v_c, pos):
-    out, k_c, v_c = attn_decode(h, p, cfg, rope, k_c, v_c, pos)
+def shared_attn_decode(h, p, cfg: ArchConfig, rope, k_c, v_c, pos,
+                       start=None):
+    out, k_c, v_c = attn_decode(h, p, cfg, rope, k_c, v_c, pos, start)
     h = h + out
     h = h + ffn_apply(h, p, cfg)
     return h, k_c, v_c
@@ -411,11 +419,13 @@ def lm_decode(params, cfg: ArchConfig, tokens, cache):
     if cfg.family == "hybrid":
         return _hybrid_decode(params, cfg, h, rope, cache)
 
+    start = cache.get("start")
+
     def body(carry, p):
         h, k_all, v_all, li = carry
         k_c = jax.lax.dynamic_index_in_dim(k_all, li, 0, False)
         v_c = jax.lax.dynamic_index_in_dim(v_all, li, 0, False)
-        out, k_c, v_c = attn_decode(h, p, cfg, rope, k_c, v_c, pos)
+        out, k_c, v_c = attn_decode(h, p, cfg, rope, k_c, v_c, pos, start)
         h = h + out
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, k_c, li, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, v_c, li, 0)
@@ -488,6 +498,7 @@ def _hybrid_forward(params, cfg: ArchConfig, h, rope, mode):
 def _hybrid_decode(params, cfg: ArchConfig, h, rope, cache):
     heads, tails, G, R = _hybrid_split(cfg, params["blocks"])
     pos = cache["pos"]
+    start = cache.get("start")
     shared = params["shared_attn"]
 
     def mamba_step(carry, p):
@@ -508,7 +519,8 @@ def _hybrid_decode(params, cfg: ArchConfig, h, rope, cache):
             mamba_step, (h, conv_all, ssm_all, li), gp)
         k_c = jax.lax.dynamic_index_in_dim(k_all, gi, 0, False)
         v_c = jax.lax.dynamic_index_in_dim(v_all, gi, 0, False)
-        h, k_c, v_c = shared_attn_decode(h, shared, cfg, rope, k_c, v_c, pos)
+        h, k_c, v_c = shared_attn_decode(h, shared, cfg, rope, k_c, v_c, pos,
+                                         start)
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, k_c, gi, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, v_c, gi, 0)
         return (h, conv_all, ssm_all, li, k_all, v_all, gi + 1), None
@@ -598,6 +610,7 @@ def whisper_forward(params, cfg: ArchConfig, frames, tokens,
 
 def whisper_decode(params, cfg: ArchConfig, tokens, cache):
     pos = cache["pos"]
+    start = cache.get("start")
     B = tokens.shape[0]
     h = embed(tokens, params["embed"]).astype(cfg.param_dtype)
     h = h + sinusoidal_positions(
@@ -609,7 +622,8 @@ def whisper_decode(params, cfg: ArchConfig, tokens, cache):
         k_c = jax.lax.dynamic_index_in_dim(k_all, li, 0, False)
         v_c = jax.lax.dynamic_index_in_dim(v_all, li, 0, False)
         out, k_c, v_c = attn_decode(h, p, cfg, rope=None,
-                                    k_cache=k_c, v_cache=v_c, pos=pos)
+                                    k_cache=k_c, v_cache=v_c, pos=pos,
+                                    start=start)
         h = h + out
         h = h + _cross_attend(h, p, cfg, ck, cv)
         h = h + ffn_apply(h, p, cfg)
@@ -643,7 +657,11 @@ def cache_decls(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
     f32 = jnp.float32
     bf = cfg.param_dtype
     decls: Dict[str, Any] = {
-        "pos": ParamDecl((), (), "zeros", jnp.int32)}
+        "pos": ParamDecl((), (), "zeros", jnp.int32),
+        # per-slot attention-window base: slot b attends cache positions
+        # [start[b], pos].  0 for whole-batch generation; the continuous-
+        # batching engine bumps it when a slot is re-issued mid-flight.
+        "start": ParamDecl((batch,), ("batch",), "zeros", jnp.int32)}
     if cfg.family == "ssm":
         decls["conv"] = ParamDecl((cfg.n_layers, batch, K - 1, d_in),
                                   (None, "batch", None, "model"), "zeros", bf)

@@ -1,9 +1,22 @@
-"""Batched serving engine: continuous-batching prefill + decode.
+"""Batched serving engine: fused device-resident decode + continuous batching.
+
+The decode hot path is ONE compiled HLO module (``Model.decode_many``: a
+``lax.scan`` over decode steps with on-device sampling and per-slot stop
+conditions), jitted with ``donate_argnums`` so the KV cache and sampler key
+are updated in place instead of re-materialized every token.  That makes the
+decode cell a single program `core.hlo_counters` can census and place on the
+instruction roofline — and removes the per-token host round-trip the legacy
+loop pays (kept as ``fused=False`` for the measured comparison in
+``benchmark_decode`` / benchmarks/serve_bench.py).
+
+``ContinuousBatchingEngine`` adds slot-level scheduling on top of the same
+compiled single step: finished sequences release their slot and queued
+requests join mid-flight with NO recompilation — the new prompt is fed
+through the already-compiled decode step (prefill-by-decode) while the
+slot's ``start`` entry masks the previous occupant's KV rows.
 
 CPU-runnable end-to-end (examples/serve_demo.py); the same step functions are
-what launch/serve.py lowers for the production mesh.  Requests join a slot
-when one frees (continuous batching); each decode step advances every live
-slot by one token.
+what launch/serve.py lowers for the production mesh.
 """
 from __future__ import annotations
 
@@ -15,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Model
+from repro.models.model import Model, sample_token
 
 
 @dataclasses.dataclass
@@ -25,6 +38,9 @@ class ServeConfig:
     max_new_tokens: int = 16
     temperature: float = 0.0          # 0 = greedy
     seed: int = 0
+    eos_id: int = -1                  # < 0: no stop condition
+    pad_id: int = 0                   # emitted by finished slots
+    fused: bool = True                # decode_many scan vs per-token loop
 
 
 @dataclasses.dataclass
@@ -43,24 +59,29 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self._decode = jax.jit(model.decode_step)
+        # donate the cache through BOTH decode paths: XLA aliases the input
+        # buffer to the output, so each step updates the cache in place
+        # instead of allocating a full copy per token
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
         self._prefill = jax.jit(model.prefill)
+        self._decode_many = jax.jit(
+            model.decode_many,
+            static_argnames=("num_steps", "temperature", "eos_id", "pad_id"),
+            donate_argnums=(2, 3))          # cache + sampler key
         self._key = jax.random.key(cfg.seed)
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.cfg.temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits / self.cfg.temperature,
-                                      axis=-1)
+    # -- sampling ---------------------------------------------------------------
 
-    def generate_batch(self, prompts: List[np.ndarray],
-                       max_new_tokens: Optional[int] = None
-                       ) -> List[List[int]]:
-        """Left-pads prompts to a common length, prefills once, then decodes
-        all sequences in lockstep (the decode_32k cell's shape)."""
-        cfg = self.cfg
-        mnt = max_new_tokens or cfg.max_new_tokens
+    def _sample(self, logits: jax.Array, key: jax.Array):
+        """One sampling step (models.model.sample_token, the shared helper,
+        so legacy and fused paths are token-identical for a given seed)."""
+        return sample_token(logits, key, self.cfg.temperature)
+
+    # -- prefill ---------------------------------------------------------------
+
+    def _prefill_cache(self, prompts: List[np.ndarray], mnt: int):
+        """Left-pads prompts to a common length, prefills once, scatters the
+        prefill KV into a fresh (donatable) decode cache."""
         B = len(prompts)
         S = max(len(p) for p in prompts)
         toks = np.zeros((B, S), np.int32)
@@ -76,30 +97,249 @@ class ServingEngine:
             pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
             cache[k] = jnp.pad(src.astype(dst.dtype), pad)
         cache["pos"] = jnp.asarray(S, jnp.int32)
+        return last_logits, cache
 
-        outs: List[List[int]] = [[] for _ in range(B)]
-        tok = self._sample(last_logits)[:, None].astype(jnp.int32)
+    # -- generation ---------------------------------------------------------------
+
+    def generate_batch(self, prompts: List[np.ndarray],
+                       max_new_tokens: Optional[int] = None,
+                       fused: Optional[bool] = None) -> List[List[int]]:
+        """Prefill once, then decode all sequences in lockstep (the
+        decode_32k cell's shape).  ``fused=True`` (default) runs the whole
+        token loop on device; ``fused=False`` is the legacy per-token host
+        loop (same tokens, one dispatch + sync per step)."""
+        cfg = self.cfg
+        mnt = max_new_tokens or cfg.max_new_tokens
+        fused = cfg.fused if fused is None else fused
+        B = len(prompts)
+
+        last_logits, cache = self._prefill_cache(prompts, mnt)
+        key = self._key
+        first, key = self._sample(last_logits, key)
+
+        if fused:
+            toks, cache, key, _done = self._decode_many(
+                self.params, first[:, None], cache, key,
+                num_steps=mnt - 1, temperature=cfg.temperature,
+                eos_id=cfg.eos_id, pad_id=cfg.pad_id)
+            all_toks = np.concatenate(
+                [np.asarray(first)[None], np.asarray(toks)], axis=0)
+        else:
+            tok = first[:, None]
+            rows = [np.asarray(first)]
+            for _ in range(mnt - 1):
+                logits, cache = self._decode(self.params, tok, cache)
+                t, key = self._sample(logits, key)
+                tok = t[:, None]
+                rows.append(np.asarray(t))         # per-token host sync
+            all_toks = np.stack(rows, axis=0)
+        self._key = key
+
+        outs: List[List[int]] = []
         for i in range(B):
-            outs[i].append(int(tok[i, 0]))
-        for _ in range(mnt - 1):
-            logits, cache = self._decode(self.params, tok, cache)
-            tok = self._sample(logits)[:, None].astype(jnp.int32)
-            for i in range(B):
-                outs[i].append(int(tok[i, 0]))
+            col = [int(t) for t in all_toks[:, i]]
+            if cfg.eos_id >= 0 and cfg.eos_id in col:
+                col = col[: col.index(cfg.eos_id) + 1]
+            outs.append(col)
         return outs
+
+    # -- benchmarking ---------------------------------------------------------------
 
     def benchmark_decode(self, batch: int, seq: int, steps: int = 8
                          ) -> Dict[str, float]:
         """Wall-clock decode throughput on this host (CPU here; the TPU
-        numbers come from the dry-run roofline)."""
-        cache = self.model.init_cache(batch, seq)
-        cache["pos"] = jnp.asarray(seq // 2, jnp.int32)
-        tok = jnp.zeros((batch, 1), jnp.int32)
-        logits, cache = self._decode(self.params, tok, cache)  # compile
-        jax.block_until_ready(logits)
-        t0 = time.time()
+        numbers come from the dry-run roofline): the fused device-resident
+        loop vs the legacy per-step loop, both with donated caches."""
+        assert seq // 2 + 2 * steps + 2 <= seq, \
+            f"steps={steps} overruns the cache (seq={seq})"
+
+        def fresh_cache():
+            cache = self.model.init_cache(batch, seq)
+            cache["pos"] = jnp.asarray(seq // 2, jnp.int32)
+            return cache
+
+        tok0 = jnp.zeros((batch, 1), jnp.int32)
+
+        # legacy: one dispatch + argmax + host sync per token
+        cache = fresh_cache()
+        logits, cache = self._decode(self.params, tok0, cache)  # compile
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        t0 = time.perf_counter()
         for _ in range(steps):
             logits, cache = self._decode(self.params, tok, cache)
-        jax.block_until_ready(logits)
-        dt = (time.time() - t0) / steps
-        return {"s_per_step": dt, "tokens_per_s": batch / dt}
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            np.asarray(tok)                        # the per-token round-trip
+        dt_loop = (time.perf_counter() - t0) / steps
+
+        # fused: one dispatch for the whole token loop
+        key = jax.random.key(self.cfg.seed)
+        cache = fresh_cache()
+        toks, cache, key, _ = self._decode_many(   # compile
+            self.params, tok0, cache, key, num_steps=steps,
+            temperature=0.0, eos_id=-1, pad_id=0)
+        jax.block_until_ready(toks)
+        t0 = time.perf_counter()
+        toks, cache, key, _ = self._decode_many(
+            self.params, tok0, cache, key, num_steps=steps,
+            temperature=0.0, eos_id=-1, pad_id=0)
+        jax.block_until_ready(toks)
+        dt_fused = (time.perf_counter() - t0) / steps
+
+        return {
+            "s_per_step": dt_fused,
+            "tokens_per_s": batch / dt_fused,
+            "s_per_step_fused": dt_fused,
+            "tokens_per_s_fused": batch / dt_fused,
+            "s_per_step_loop": dt_loop,
+            "tokens_per_s_loop": batch / dt_loop,
+            "fused_speedup": dt_loop / dt_fused,
+        }
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    forced: List[int] = dataclasses.field(default_factory=list)
+    out: List[int] = dataclasses.field(default_factory=list)
+    budget: int = 0
+    active: bool = False
+
+
+def _make_engine_step(model: Model):
+    """One decode step + sampling + forced-token override, as a pure
+    function of arrays (compiled exactly once per temperature)."""
+
+    def step(params, tok, cache, key, forced_tok, forced_mask,
+             temperature: float):
+        logits, cache = model.decode_step(params, tok[:, None], cache)
+        sampled, key = sample_token(logits, key, temperature)
+        nxt = jnp.where(forced_mask, forced_tok, sampled)
+        return nxt, cache, key
+
+    return step
+
+
+class ContinuousBatchingEngine:
+    """Slot-scheduled decoding over ONE compiled step — no recompiles, ever.
+
+    All ``max_batch`` slots advance in lockstep over a shared, donated,
+    slot-paged KV cache (one (max_seq, KV, hd) page per slot).  A queued
+    request joins the moment a slot frees:
+
+      * the slot's ``start`` is set to the current shared position, masking
+        the previous occupant's KV rows (per-slot attention window);
+      * its prompt is fed through the SAME compiled decode step one token
+        per engine step ("prefill-by-decode") — the sampled output is
+        overridden by the next prompt token until the prompt is exhausted,
+        after which sampled tokens are collected as output.
+
+    Decoder-only LMs only (whisper needs per-request cross-attention caches;
+    a joining SSM slot would inherit the previous occupant's state).
+    """
+
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        if model.cfg.is_encoder_decoder or model.cfg.mamba_version:
+            raise ValueError("continuous batching requires a decoder-only "
+                             "attention LM (per-slot KV windows)")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        B = cfg.max_batch
+        self._step = jax.jit(_make_engine_step(model),
+                             static_argnames=("temperature",),
+                             donate_argnums=(2, 3))   # cache + key
+        self.cache = model.init_cache(B, cfg.max_seq)
+        self.key = jax.random.key(cfg.seed)
+        self.pos = 0                                  # host mirror of pos
+        self.slots = [_Slot() for _ in range(B)]
+        self.queue: List[Request] = []
+        self.results: Dict[int, List[int]] = {}
+        self._feed = np.full((B,), cfg.pad_id, np.int32)
+        self._next_rid = 0
+        self.steps_run = 0
+        self.joins = 0
+
+    # -- request lifecycle -----------------------------------------------------
+
+    def submit(self, prompt: np.ndarray,
+               max_new_tokens: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt: a slot needs at least one "
+                             "token to feed the decode step")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt,
+                                  max_new_tokens or self.cfg.max_new_tokens))
+        return rid
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = [int(t) for t in req.prompt]
+            self.slots[i] = _Slot(rid=req.rid, forced=prompt[1:], out=[],
+                                  budget=req.max_new_tokens, active=True)
+            # window base: mask every cache row this slot wrote before
+            self.cache["start"] = self.cache["start"].at[i].set(self.pos)
+            self._feed[i] = prompt[0]
+            self.joins += 1
+
+    def _finish(self, i: int) -> None:
+        slot = self.slots[i]
+        self.results[slot.rid] = slot.out
+        self.slots[i] = _Slot()
+        self._feed[i] = self.cfg.pad_id
+
+    # -- stepping ---------------------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
+    def step(self) -> None:
+        """Admit waiting requests, advance every slot by one token."""
+        cfg = self.cfg
+        if self.pos + 1 >= cfg.max_seq:
+            raise RuntimeError(
+                f"KV cache exhausted at pos={self.pos} (max_seq="
+                f"{cfg.max_seq}); page eviction is a recorded follow-up")
+        self._admit()
+        forced_tok = np.full((len(self.slots),), cfg.pad_id, np.int32)
+        forced_mask = np.zeros((len(self.slots),), bool)
+        for i, slot in enumerate(self.slots):
+            if slot.active and slot.forced:
+                forced_tok[i] = slot.forced.pop(0)
+                forced_mask[i] = True
+        nxt, self.cache, self.key = self._step(
+            self.params, jnp.asarray(self._feed), self.cache, self.key,
+            jnp.asarray(forced_tok), jnp.asarray(forced_mask),
+            temperature=cfg.temperature)
+        self.pos += 1
+        self.steps_run += 1
+        nxt_np = np.asarray(nxt)
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            if forced_mask[i]:                      # still catching up
+                self._feed[i] = nxt_np[i]
+                continue
+            tok = int(nxt_np[i])                    # sampled: real output
+            slot.out.append(tok)
+            if (cfg.eos_id >= 0 and tok == cfg.eos_id) \
+                    or len(slot.out) >= slot.budget:
+                self._finish(i)
+            else:
+                self._feed[i] = nxt_np[i]
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain queue + slots; returns {rid: generated tokens}."""
+        while self.busy:
+            self.step()
+        return self.results

@@ -115,6 +115,8 @@ def test_scan_trip_count_scaling():
     assert census.mxu_flops == pytest.approx(L * 2 * D * D * D)
     # XLA's own analysis sees one iteration:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):         # older jax: one dict per device
+        ca = ca[0]
     assert ca["flops"] < census.mxu_flops / 2
 
 

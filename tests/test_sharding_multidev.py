@@ -24,8 +24,11 @@ from repro.core.hlo_counters import census_from_compiled
 
 out = {}
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+try:
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+except (AttributeError, TypeError):            # jax < 0.5: no AxisType
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
 rules = MeshRules(batch_axes=("data",), fsdp_axes=("data",),
                   model_axis="model")
 
