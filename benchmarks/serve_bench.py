@@ -1,10 +1,19 @@
 """Serving micro-benchmark: batched decode throughput at smoke scale (the
 decode_32k cells' runnable counterpart).
 
-Reports the fused device-resident ``decode_many`` loop against the legacy
-per-token host loop (both with donated caches), plus the continuous-batching
-engine's end-to-end tokens/s.  ``--json`` writes BENCH_serve.json so the
-perf trajectory is tracked across PRs.
+Two scenarios (``--scenario smoke|ragged|all``):
+
+  * smoke — the fused device-resident ``decode_many`` loop against the
+    legacy per-token host loop (both with donated caches), plus the
+    lockstep continuous-batching engine's end-to-end tokens/s.
+  * ragged — continuous batching under a RAGGED workload (mixed prompt and
+    output lengths, mid-flight joins: 3x batch requests over batch slots):
+    the non-lockstep paged engine (chunked prefill through the fused decode
+    cell) against the lockstep dense engine at equal ``max_seq``, reporting
+    tokens/s and page-pool utilization.
+
+``--json`` writes BENCH_serve.json so the perf trajectory is tracked across
+PRs.
 """
 from __future__ import annotations
 
@@ -18,6 +27,9 @@ import jax
 import numpy as np
 
 SMOKE = dict(arch="granite-8b", batch=4, seq=128, steps=8)
+RAGGED = dict(arch="granite-8b", batch=4, max_seq=192, requests=12,
+              prompt_lo=4, prompt_hi=24, out_lo=4, out_hi=16,
+              page_size=16, prefill_chunk=4)
 
 
 def _engine():
@@ -56,44 +68,155 @@ def run() -> Dict[str, float]:
     return stats
 
 
+def _ragged_requests(cfg, rng) -> List:
+    r = RAGGED
+    return [(rng.randint(0, cfg.vocab_size,
+                         size=rng.randint(r["prompt_lo"], r["prompt_hi"] + 1)
+                         ).astype(np.int32),
+             int(rng.randint(r["out_lo"], r["out_hi"] + 1)))
+            for _ in range(r["requests"])]
+
+
+def _drive(engine, reqs) -> Dict[str, float]:
+    """Submit the ragged workload against a warm engine and time the drain.
+    Tokens/joins are counted for THIS drive's requests only (engine.results
+    and the join counter accumulate across drives — the warm-up run must
+    not leak into the timed window)."""
+    joins0 = engine.joins
+    rids = [engine.submit(p, mnt) for p, mnt in reqs]
+    t0 = time.perf_counter()
+    results = engine.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(results[r]) for r in rids)
+    return {"tokens": float(n_tok), "seconds": dt,
+            "tokens_per_s": n_tok / max(dt, 1e-9),
+            "joins": float(engine.joins - joins0)}
+
+
+def run_ragged() -> Dict[str, float]:
+    """Ragged continuous batching: paged (non-lockstep, chunked prefill)
+    vs dense lockstep engine at equal max_seq."""
+    from repro.configs import get
+    from repro.models import get_model
+    from repro.serve.engine import (
+        ContinuousBatchingEngine, PagedEngine, ServeConfig)
+    r = RAGGED
+    cfg = get(r["arch"]).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.RandomState(0)
+    reqs = _ragged_requests(cfg, rng)
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+
+    dense = ContinuousBatchingEngine(
+        model, params, ServeConfig(max_batch=r["batch"],
+                                   max_seq=r["max_seq"]))
+    _drive(dense, warm)                              # compile
+    wraps0 = dense.wraps
+    d = _drive(dense, reqs)
+
+    paged = PagedEngine(
+        model, params, ServeConfig(max_batch=r["batch"],
+                                   max_seq=r["max_seq"],
+                                   page_size=r["page_size"],
+                                   prefill_chunk=r["prefill_chunk"]))
+    _drive(paged, warm)                              # compile
+    util0, ticks0 = paged.util_sum, paged.steps_run  # exclude warm-up ticks
+    stalls0 = paged.stalls
+    paged.util_max = 0.0
+    p = _drive(paged, reqs)
+
+    return {
+        "ragged_tokens": p["tokens"],
+        "ragged_tokens_per_s_paged": p["tokens_per_s"],
+        "ragged_tokens_per_s_dense": d["tokens_per_s"],
+        "ragged_paged_speedup": p["tokens_per_s"] / max(d["tokens_per_s"],
+                                                        1e-9),
+        "ragged_joins_paged": p["joins"],
+        "ragged_page_util_mean": (paged.util_sum - util0)
+        / max(1, paged.steps_run - ticks0),
+        "ragged_page_util_max": paged.util_max,
+        "ragged_dense_wraps": float(dense.wraps - wraps0),
+        "ragged_paged_stalls": float(paged.stalls - stalls0),
+    }
+
+
 def bench_lines_from(stats: Dict[str, float]) -> List[str]:
     name = f"serve/{SMOKE['arch']}-reduced-decode"
-    return [
-        f"{name},{stats['s_per_step_fused']*1e6:.0f},"
-        f"tokens_per_s={stats['tokens_per_s_fused']:.1f}",
-        f"{name}-legacy-loop,{stats['s_per_step_loop']*1e6:.0f},"
-        f"tokens_per_s={stats['tokens_per_s_loop']:.1f}",
-        f"{name}-fused-speedup,0,x{stats['fused_speedup']:.2f}",
-        f"serve/continuous-batching,0,"
-        f"tokens_per_s={stats['continuous_tokens_per_s']:.1f}",
-    ]
+    lines = []
+    if "s_per_step_fused" in stats:
+        lines += [
+            f"{name},{stats['s_per_step_fused']*1e6:.0f},"
+            f"tokens_per_s={stats['tokens_per_s_fused']:.1f}",
+            f"{name}-legacy-loop,{stats['s_per_step_loop']*1e6:.0f},"
+            f"tokens_per_s={stats['tokens_per_s_loop']:.1f}",
+            f"{name}-fused-speedup,0,x{stats['fused_speedup']:.2f}",
+            f"serve/continuous-batching,0,"
+            f"tokens_per_s={stats['continuous_tokens_per_s']:.1f}",
+        ]
+    if "ragged_tokens_per_s_paged" in stats:
+        lines += [
+            f"serve/ragged-paged,0,"
+            f"tokens_per_s={stats['ragged_tokens_per_s_paged']:.1f}",
+            f"serve/ragged-dense,0,"
+            f"tokens_per_s={stats['ragged_tokens_per_s_dense']:.1f}",
+            f"serve/ragged-paged-speedup,0,"
+            f"x{stats['ragged_paged_speedup']:.2f}",
+            f"serve/ragged-page-util,0,"
+            f"mean={stats['ragged_page_util_mean']:.2f}"
+            f"/max={stats['ragged_page_util_max']:.2f}",
+        ]
+    return lines
 
 
 def bench() -> List[str]:
-    return bench_lines_from(run())
+    stats = run()
+    stats.update(run_ragged())
+    return bench_lines_from(stats)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_serve.json next to the repo root")
+    ap.add_argument("--scenario", choices=("smoke", "ragged", "all"),
+                    default="all",
+                    help="smoke: fused-vs-loop decode; ragged: paged vs "
+                         "dense continuous batching under mixed lengths")
     args = ap.parse_args()
-    stats = run()
+    stats: Dict[str, float] = {}
+    if args.scenario in ("smoke", "all"):
+        stats.update(run())
+    if args.scenario in ("ragged", "all"):
+        stats.update(run_ragged())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
         path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serve.json")
-        record = {
-            "config": SMOKE,
-            "backend": jax.default_backend(),
-            "s_per_step_fused": stats["s_per_step_fused"],
-            "s_per_step_loop": stats["s_per_step_loop"],
-            "tokens_per_s_fused": stats["tokens_per_s_fused"],
-            "tokens_per_s_loop": stats["tokens_per_s_loop"],
-            "fused_speedup": stats["fused_speedup"],
-            "continuous_tokens_per_s": stats["continuous_tokens_per_s"],
-        }
+        # merge over any existing record so a partial --scenario run never
+        # erases the other scenario's tracked trajectory
+        record: Dict[str, object] = {}
+        try:
+            with open(os.path.abspath(path)) as f:
+                record = json.load(f)
+        except (OSError, ValueError):
+            pass
+        record["backend"] = jax.default_backend()
+        if args.scenario in ("smoke", "all"):
+            record.update({
+                "config": SMOKE,
+                "s_per_step_fused": stats["s_per_step_fused"],
+                "s_per_step_loop": stats["s_per_step_loop"],
+                "tokens_per_s_fused": stats["tokens_per_s_fused"],
+                "tokens_per_s_loop": stats["tokens_per_s_loop"],
+                "fused_speedup": stats["fused_speedup"],
+                "continuous_tokens_per_s": stats["continuous_tokens_per_s"],
+            })
+        if args.scenario in ("ragged", "all"):
+            record["ragged"] = dict(
+                config=RAGGED,
+                **{k: stats[k] for k in stats if k.startswith("ragged_")})
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

@@ -501,6 +501,21 @@ def _fusion_param_read_bytes(fcomp: Computation, param_index: int,
         if f.opcode in _SLICE_LIKE:
             total += f.shapes[0].bytes
             continue
+        if f.opcode == "gather":
+            src = _through_operand(fcomp, f, 0)
+            if src is not None and src.name == pname:
+                # table operand of a gather: only the gathered rows are
+                # read (paged-KV pools — see the irregular-class model)
+                total += f.shapes[0].bytes
+                continue
+        if f.opcode == "scatter":
+            dest = _through_operand(fcomp, f, 0)
+            if dest is not None and dest.name == pname and \
+                    len(f.operands) >= 3:
+                upd = _through_operand(fcomp, f, 2)
+                if upd is not None and upd.shapes:
+                    total += upd.shapes[0].bytes
+                    continue
         if f.opcode == "dynamic-update-slice":
             dest = _through_operand(fcomp, f, 0)
             if dest is not None and dest.name == pname:
@@ -533,6 +548,12 @@ def _fusion_write_bytes(fcomp: Computation) -> float:
             cur = nxt
         if cur.opcode == "dynamic-update-slice" and len(cur.operands) >= 2:
             upd = _through_operand(fcomp, cur, 1)
+            if upd is not None and upd.shapes:
+                total += upd.shapes[0].bytes
+                continue
+        if cur.opcode == "scatter" and len(cur.operands) >= 3:
+            # in-place row scatter: only the update rows are written
+            upd = _through_operand(fcomp, cur, 2)
             if upd is not None and upd.shapes:
                 total += upd.shapes[0].bytes
                 continue
@@ -731,7 +752,21 @@ class ModuleCensus:
             return
 
         if cls == "irregular":
-            moved = opnd_bytes + res_bytes
+            if base == "gather" and opnd_shapes:
+                # the memory system touches the gathered rows (read) + the
+                # result (write) + the index stream — NOT the whole table
+                # operand (the paged-KV block-table gather reads live pages
+                # only; counting the full pool would erase exactly the
+                # transaction scaling the paged cache exists to create)
+                idx = opnd_shapes[1].bytes if len(opnd_shapes) > 1 else 0.0
+                moved = 2.0 * res_bytes + idx
+            elif base == "scatter" and len(opnd_shapes) >= 3:
+                # in-place row update: read+write the update rows + the
+                # index stream; the untouched operand aliases (same
+                # convention as dynamic-update-slice above)
+                moved = 2.0 * opnd_shapes[2].bytes + opnd_shapes[1].bytes
+            else:
+                moved = opnd_bytes + res_bytes
             out.irregular_bytes += moved
             if count_bytes:
                 out.hbm_bytes += moved

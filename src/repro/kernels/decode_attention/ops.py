@@ -11,6 +11,7 @@ from typing import Optional
 import jax
 
 from repro.kernels.decode_attention import decode as _decode
+from repro.kernels.decode_attention import paged as _paged
 
 
 def _auto_interpret(interpret):
@@ -27,4 +28,17 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     None.  Returns (B, 1, H, D)."""
     return _decode.decode_attention_fwd(
         q, k, v, kv_len, kv_start, block_kv=block_kv,
+        interpret=_auto_interpret(interpret))
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           kv_len: jax.Array, layer=0,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, 1, H, D); k_pool, v_pool (L, num_pages, page, KV, D) stacked
+    pools (4D single-layer accepted); block_table (B, max_blocks) int32
+    (page 0 = reserved null page); kv_len (B,) int32 per-slot token counts;
+    layer — pool layer to address.  Returns (B, 1, H, D)."""
+    return _paged.paged_decode_attention_fwd(
+        q, k_pool, v_pool, block_table, kv_len, layer,
         interpret=_auto_interpret(interpret))

@@ -1,0 +1,143 @@
+"""Paged single-token decode attention as a Pallas TPU kernel.
+
+The paged serving hot path: one new query per slot attends over that slot's
+PAGES of a shared (num_pages, page, KV, D) pool.  The physical page holding
+each logical block comes from a scalar-prefetched block table — the DMA
+address is computed from SMEM before the tile is fetched, so the kernel
+streams ONLY the pages a slot actually owns.  That is the point for the
+instruction roofline: the decode step's transaction count is proportional to
+live tokens (max_blocks x page per slot) instead of ``max_seq``, which
+``core.hlo_counters`` verifies on the jnp gather oracle (the dense cache
+reads every row of a (B, max_seq, KV, D) cache whether or not it is live).
+
+Shape strategy (mirrors the dense decode kernel in ``decode.py``):
+
+  * grid = (B, KV, max_blocks) — logical blocks are the MINOR axis, so the
+    online-softmax state for one (slot, kv-head) lives in VMEM scratch
+    across the page sweep.
+  * GQA without materializing repeated kv heads: q reshaped to
+    (B, KV, G, D), each grid step runs [G, D] x [D, page] on the MXU.
+  * per-slot ``kv_len`` + the flattened block table + the layer index
+    arrive via scalar prefetch (SMEM): the k/v BlockSpec index_map reads
+    ``tbl[b * max_blocks + j]`` to pick the physical page, and blocks at or
+    beyond the slot's length are skipped with ``pl.when`` (their table
+    entries point at the reserved null page 0, so the prefetch address is
+    always valid).
+  * the pool stays STACKED (L, num_pages, page, KV, D): the layer-scan
+    caller passes its trip counter as the ``layer`` scalar and the
+    index_map addresses (layer, page) directly — no per-layer pool slice
+    is ever materialized (a dynamic-slice of the full pool per layer is
+    exactly the max_seq-proportional traffic the paged design removes).
+
+Inference-only: no VJP (the jnp gather oracle in ``ref.py`` carries
+gradients where needed).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, tbl_ref, layer_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, page: int,
+            num_blocks: int):
+    b = pl.program_id(0)
+    bj = pl.program_id(2)
+
+    @pl.when(bj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kvlen_ref[b]
+    # block bj holds logical positions [bj*page, (bj+1)*page): live iff it
+    # overlaps [0, kv_len) — per-slot positions always start at 0
+    run = bj * page < kv_len
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, 0, :, 0].astype(jnp.float32)        # (page, D)
+        v = v_ref[0, 0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, page)
+        tpos = bj * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(bj == num_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_table: jax.Array,
+                               kv_len: jax.Array,
+                               layer: jax.Array | int = 0, *,
+                               interpret: bool = False) -> jax.Array:
+    """q (B, 1, H, D); k_pool, v_pool (L, num_pages, page, KV, D) stacked
+    pools (a 4D (num_pages, page, KV, D) single-layer pool is promoted);
+    block_table (B, max_blocks) int32 physical page ids (0 = reserved null
+    page for unallocated blocks); kv_len (B,) int32 per-slot token counts
+    (positions >= kv_len[b] are masked); layer — which pool layer to
+    address (the layer-scan trip counter).  Returns (B, 1, H, D)."""
+    B, S, H, D = q.shape
+    assert S == 1, "paged decode kernel is single-token"
+    if k_pool.ndim == 4:
+        k_pool, v_pool = k_pool[None], v_pool[None]
+    _, num_pages, page, KV, _ = k_pool.shape
+    NB = block_table.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, KV, G, D)                  # kv-major head grouping
+    tbl = jnp.asarray(block_table, jnp.int32).reshape(B * NB)
+    kvl = jnp.asarray(kv_len, jnp.int32).reshape(B)
+    lay = jnp.asarray(layer, jnp.int32).reshape(1)
+
+    def _page_map(b, h, j, kvl_ref, tbl_ref, lay_ref):
+        return (lay_ref[0], tbl_ref[b * NB + j], 0, h, 0)
+
+    kernel = functools.partial(_kernel, scale=scale, page=page,
+                               num_blocks=NB)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, KV, NB),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, page, 1, D), _page_map),
+                pl.BlockSpec((1, 1, page, 1, D), _page_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),     # running row max
+                pltpu.VMEM((G, 1), jnp.float32),     # running row sum
+                pltpu.VMEM((G, D), jnp.float32),     # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(kvl, tbl, lay, qg, k_pool, v_pool)
+    return out.reshape(B, 1, H, D)

@@ -1,7 +1,13 @@
-"""Pure-jnp oracle for the Pallas decode-attention kernel: the direct
+"""Pure-jnp oracles for the Pallas decode-attention kernels: the direct
 softmax attention with kv_len / kv_start window masking
 (repro.models.attention.direct_attention) — interpret-mode tests assert the
-kernel matches it bit-for-bit in fp32."""
+kernels match them bit-for-bit in fp32.
+
+``paged_decode_attention_ref`` is also the production jnp path for the paged
+cache (``cfg.attention_impl == "reference"``): a block-table gather
+materializes each slot's logical view of the pool, so the HLO census sees
+gather traffic proportional to live pages — the roofline claim the paged
+design exists to make measurable."""
 from typing import Optional
 
 import jax
@@ -16,3 +22,23 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     kv_len_m1 = kv_len - 1
     return direct_attention(q, k, v, causal=True, q_offset=kv_len_m1,
                             kv_len=kv_len, kv_start=kv_start)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_table: jax.Array,
+                               kv_len: jax.Array, layer=0) -> jax.Array:
+    """q (B, 1, H, D); k_pool, v_pool (L, num_pages, page, KV, D) stacked
+    pools (4D single-layer pools are promoted); block_table (B, max_blocks)
+    int32; kv_len (B,) int32 per-slot token counts; layer — the pool layer
+    to address.  Gathers each slot's pages into its logical
+    (max_blocks*page, KV, D) view in ONE (layer, page) gather — live pages
+    only, never the whole pool — then masks positions >= kv_len[b].
+    Returns (B, 1, H, D)."""
+    if k_pool.ndim == 4:
+        k_pool, v_pool = k_pool[None], v_pool[None]
+    B = q.shape[0]
+    _, _, page, KV, D = k_pool.shape
+    NB = block_table.shape[1]
+    kg = k_pool[layer, block_table].reshape(B, NB * page, KV, D)
+    vg = v_pool[layer, block_table].reshape(B, NB * page, KV, D)
+    return direct_attention(q, kg, vg, causal=False, kv_len=kv_len)

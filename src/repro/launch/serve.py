@@ -23,13 +23,17 @@ def main() -> int:
     ap.add_argument("--continuous", action="store_true",
                     help="slot-scheduled continuous batching demo "
                          "(submits 2x batch requests over batch slots)")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --continuous: the non-lockstep paged engine "
+                         "(per-slot positions, page free list, chunked "
+                         "prefill through the fused decode cell)")
     args = ap.parse_args()
 
     import jax
     from repro import configs
     from repro.models import get_model
     from repro.serve.engine import (
-        ContinuousBatchingEngine, ServeConfig, ServingEngine)
+        ContinuousBatchingEngine, PagedEngine, ServeConfig, ServingEngine)
 
     cfg = configs.get(args.arch)
     if args.local_smoke:
@@ -48,15 +52,20 @@ def main() -> int:
     rng = np.random.RandomState(0)
 
     if args.continuous:
-        engine = ContinuousBatchingEngine(model, params, scfg)
+        cls = PagedEngine if args.paged else ContinuousBatchingEngine
+        engine = cls(model, params, scfg)
         rids = [engine.submit(
             rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)
                         ).astype(np.int32)) for _ in range(2 * args.batch)]
         results = engine.run()
-        print(f"[launch.serve] continuous: {len(results)} requests, "
+        extra = (f", page util mean="
+                 f"{engine.util_sum / max(1, engine.steps_run):.2f} "
+                 f"max={engine.util_max:.2f}" if args.paged else "")
+        print(f"[launch.serve] continuous[{'paged' if args.paged else 'dense'}"
+              f"]: {len(results)} requests, "
               f"{sum(len(results[r]) for r in rids)} tokens, "
               f"{engine.joins} joins over {args.batch} slots in "
-              f"{engine.steps_run} steps")
+              f"{engine.steps_run} steps{extra}")
         return 0
 
     engine = ServingEngine(model, params, scfg)

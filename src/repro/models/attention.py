@@ -39,7 +39,9 @@ def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     smoke shapes.  GQA/MQA via grouped einsums: the kv heads are NEVER
     materialized repeated (repeating a 32k MQA cache to 48 heads costs
     ~3 GB/layer).  ``q_offset`` is the absolute position of q[0] (decode);
-    ``kv_len`` masks cache positions >= kv_len; ``kv_start`` (B,) masks
+    ``kv_len`` masks cache positions >= kv_len — a scalar for the lockstep
+    dense cache, or a (B,) vector of per-slot lengths for the paged cache
+    (every slot decodes at its own position); ``kv_start`` (B,) masks
     cache positions < kv_start[b] — the per-slot window of the
     continuous-batching engine (a slot joining mid-flight must not attend
     to the previous occupant's KV rows)."""
@@ -58,7 +60,12 @@ def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         mask = qpos[:, None] >= tpos[None, :]
         s = jnp.where(mask[None, None, None], s, NEG_INF)
     if kv_len is not None:
-        s = jnp.where((tpos < kv_len)[None, None, None, None], s, NEG_INF)
+        kvl = jnp.asarray(kv_len)
+        if kvl.ndim == 0:
+            s = jnp.where((tpos < kvl)[None, None, None, None], s, NEG_INF)
+        else:                                    # per-slot (B,) lengths
+            live = tpos[None, :] < kvl[:, None]             # (B, T)
+            s = jnp.where(live[:, None, None, None], s, NEG_INF)
     if kv_start is not None:
         live = tpos[None, :] >= kv_start[:, None]            # (B, T)
         s = jnp.where(live[:, None, None, None], s, NEG_INF)

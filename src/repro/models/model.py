@@ -73,6 +73,30 @@ class Model:
     def cache_pspecs(self, batch: int, max_seq: int, rules: MeshRules):
         return param_pspecs(self.cache_decls(batch, max_seq), rules)
 
+    # -- paged caches ---------------------------------------------------------
+    def paged_cache_decls(self, batch: int, max_blocks: int, page_size: int,
+                          num_pages: int):
+        return T.paged_cache_decls(self.cfg, batch, max_blocks, page_size,
+                                   num_pages)
+
+    def init_paged_cache(self, batch: int, max_blocks: int, page_size: int,
+                         num_pages: int):
+        return init_params(
+            self.paged_cache_decls(batch, max_blocks, page_size, num_pages),
+            jax.random.key(0), self.cfg.param_dtype)
+
+    def abstract_paged_cache(self, batch: int, max_blocks: int,
+                             page_size: int, num_pages: int):
+        return abstract_params(
+            self.paged_cache_decls(batch, max_blocks, page_size, num_pages),
+            self.cfg.param_dtype)
+
+    def paged_cache_pspecs(self, batch: int, max_blocks: int, page_size: int,
+                           num_pages: int, rules: MeshRules):
+        return param_pspecs(
+            self.paged_cache_decls(batch, max_blocks, page_size, num_pages),
+            rules)
+
     def prefill_cache_pspecs(self, shape: ShapeConfig, rules: MeshRules):
         """PartitionSpecs matching the cache-parts pytree that prefill()
         actually returns (a subset of the decode cache)."""
@@ -141,6 +165,57 @@ class Model:
             cfg2 = dataclasses.replace(cfg, embed_inputs=True)
             return T.lm_decode(params, cfg2, tokens, cache)
         return T.lm_decode(params, cfg, tokens, cache)
+
+    def decode_step_paged(self, params, tokens, cache, active=None):
+        """Non-lockstep decode step over the paged cache: tokens (B, 1)
+        int32; cache from ``init_paged_cache``; active (B,) bool (None ->
+        all slots advance).  Returns (logits (B, V), cache) — each slot's
+        new K/V lands on its OWN pages at its OWN position."""
+        cfg = self.cfg
+        if active is None:
+            active = jnp.ones((tokens.shape[0],), bool)
+        if not cfg.embed_inputs:
+            cfg = dataclasses.replace(cfg, embed_inputs=True)
+        return T.lm_decode_paged(params, cfg, tokens, cache, active)
+
+    def decode_many_paged(self, params, tokens, cache, key, active,
+                          forced_tok=None, forced_mask=None, *,
+                          num_steps: int, temperature: float = 0.0):
+        """Fused multi-token paged decode: one compiled ``lax.scan`` over
+        ``num_steps`` non-lockstep decode steps with on-device sampling —
+        the SAME cell serves chunked prefill and decode, so the whole
+        serving path is one module family ``core.hlo_counters`` can census.
+
+        tokens (B, 1) int32 — each slot's last emitted token.
+        active (B,) bool — inactive slots write only the null page and do
+        not advance their length.
+        forced_tok / forced_mask (num_steps, B) — where the mask is set the
+        emitted token is OVERRIDDEN by forced_tok (prompt feeding: chunked
+        prefill routes prompt tokens through the decode cell); None means
+        nothing forced.  eos handling is the caller's (the engine truncates
+        on the host — per-slot attention means post-eos steps of one slot
+        cannot perturb any other slot).
+
+        Returns (out_tokens (num_steps, B) int32, cache, key).
+        """
+        B = tokens.shape[0]
+        if forced_tok is None:
+            forced_tok = jnp.zeros((num_steps, B), jnp.int32)
+            forced_mask = jnp.zeros((num_steps, B), bool)
+
+        def step(carry, xs):
+            tok, cache, key = carry
+            f_tok, f_mask = xs
+            logits, cache = self.decode_step_paged(params, tok, cache,
+                                                   active)
+            nxt, key = sample_token(logits, key, temperature)
+            nxt = jnp.where(f_mask, f_tok, nxt)
+            return (nxt[:, None], cache, key), nxt
+
+        (_, cache, key), toks = jax.lax.scan(
+            step, (tokens, cache, key), (forced_tok, forced_mask),
+            length=num_steps)
+        return toks, cache, key
 
     def decode_many(self, params, tokens, cache, key, num_steps: int,
                     temperature: float = 0.0, eos_id: int = -1,

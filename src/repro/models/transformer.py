@@ -250,6 +250,49 @@ def attn_decode(h, p, cfg: ArchConfig, rope, k_cache, v_cache, pos,
     return out, k_cache, v_cache
 
 
+def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
+                      table, lengths, active):
+    """decode path over the paged KV pool: h (B, 1, d); k_pool/v_pool are
+    the STACKED (L, num_pages, page, KV, hd) pools — appended to and
+    gathered from with an explicit (layer, page) scatter/gather so no
+    pool-sized per-layer slice is ever materialized (that slice is exactly
+    the max_seq-proportional traffic the paged cache removes; the HLO
+    census asserts the step's bytes scale with live pages).  table
+    (B, max_blocks) int32 physical page ids (page 0 = reserved null page,
+    where inactive slots' writes land); lengths (B,) int32 per-slot token
+    counts; active (B,) bool.
+
+    Appends this step's K/V at each slot's OWN position (page
+    ``table[b, lengths[b] // page]``, row ``lengths[b] % page``) and attends
+    positions [0, lengths[b]] — no shared cache position, no start-window
+    masking: a slot's window is exactly the pages it owns."""
+    hn = apply_norm(h, p["ln1"], cfg)
+    a = p["attn"]
+    q, k, v = _qkv(hn, a, cfg, rope, decode=True)
+    B = h.shape[0]
+    page = k_pool.shape[2]
+    nb = table.shape[1]
+    blk = jnp.minimum(lengths // page, nb - 1)
+    phys = jnp.where(active, table[jnp.arange(B), blk], 0)
+    off = lengths % page
+    k_pool = k_pool.at[layer, phys, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[layer, phys, off].set(v[:, 0].astype(v_pool.dtype))
+    # keep the pool page-sharded through the in-place update
+    k_pool = constrain(k_pool, None, "cache_seq", None, None, None)
+    v_pool = constrain(v_pool, None, "cache_seq", None, None, None)
+    kv_len = lengths + 1
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.decode_attention.ops import paged_decode_attention
+        out = paged_decode_attention(q, k_pool, v_pool, table, kv_len, layer)
+    else:
+        from repro.kernels.decode_attention.ref import (
+            paged_decode_attention_ref)
+        out = paged_decode_attention_ref(q, k_pool, v_pool, table, kv_len,
+                                         layer)
+    out = dense(out.reshape(B, 1, -1), a["wo"])
+    return out, k_pool, v_pool
+
+
 def ffn_apply(h, p, cfg: ArchConfig):
     hn = apply_norm(h, p["ln2"], cfg)
     f = p["ffn"]
@@ -385,10 +428,17 @@ def lm_forward(params, cfg: ArchConfig, inputs, positions,
 
 
 def lm_decode(params, cfg: ArchConfig, tokens, cache):
-    """tokens (B, 1); cache per family (see init_cache)."""
+    """tokens (B, 1); cache per family (see init_cache).
+
+    ``pos`` is the cache ROW the new token is written to; ``pos_base`` is
+    added on top for the rope position stream, so row wraparound in the
+    lockstep continuous-batching engine can rebase rows without breaking
+    rope relative distances (keys already in the cache were rotated with
+    the unrebased absolute positions)."""
     B = tokens.shape[0] if cfg.embed_inputs else tokens.shape[0]
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    rope_pos = pos + cache.get("pos_base", jnp.int32(0))
+    positions = jnp.full((B, 1), rope_pos, jnp.int32)
     if cfg.mrope_sections:
         positions = jnp.broadcast_to(positions, (3, B, 1))
     rope = _rope(cfg, positions)
@@ -444,6 +494,48 @@ def lm_decode(params, cfg: ArchConfig, tokens, cache):
     (h, k, v, _), _ = jax.lax.scan(
         body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
     new_cache = dict(cache, k=k, v=v, pos=pos + 1)
+    return _logits(params, cfg, h)[:, 0], new_cache
+
+
+def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
+    """tokens (B, 1); cache {"k"/"v" (L, num_pages, page, KV, hd) pools,
+    "table" (B, max_blocks) int32, "length" (B,) int32}; active (B,) bool.
+
+    The NON-LOCKSTEP decode step: every slot advances at its own
+    ``length`` — rope positions are per-slot (request-relative, starting at
+    0 on the slot's own pages), appends go to the slot's own pages via the
+    block table, and inactive slots write only the reserved null page 0
+    without advancing.  Decoder-only attention LMs only."""
+    if cfg.mamba_version or cfg.is_encoder_decoder:
+        raise ValueError("paged decode requires a decoder-only attention LM")
+    lengths = cache["length"]
+    table = cache["table"]
+    B = tokens.shape[0]
+    positions = lengths[:, None]                       # per-slot positions
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    rope = _rope(cfg, positions)
+    h = _embed_in(params, cfg, tokens)
+
+    def body(carry, p):
+        h, k_all, v_all, li = carry
+        out, k_all, v_all = attn_decode_paged(h, p, cfg, rope, k_all, v_all,
+                                              li, table, lengths, active)
+        h = h + out
+        if cfg.n_experts:
+            m = p["moe"]
+            hn = apply_norm(h, p["ln2"], cfg)
+            o, _ = moe_ffn(hn, m["router"], m["w1"], m["w2"], m.get("w3"),
+                           cfg)
+            h = h + o
+        else:
+            h = h + ffn_apply(h, p, cfg)
+        return (h, k_all, v_all, li + 1), None
+
+    (h, k, v, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
+    new_cache = dict(cache, k=k, v=v,
+                     length=lengths + active.astype(jnp.int32))
     return _logits(params, cfg, h)[:, 0], new_cache
 
 
@@ -658,6 +750,11 @@ def cache_decls(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
     bf = cfg.param_dtype
     decls: Dict[str, Any] = {
         "pos": ParamDecl((), (), "zeros", jnp.int32),
+        # rope-position rebase: the continuous-batching engine's row
+        # wraparound slides cache ROWS down but absolute rope positions must
+        # keep advancing (keys already written were rotated with the old
+        # absolute positions) — decode rotates at pos + pos_base.
+        "pos_base": ParamDecl((), (), "zeros", jnp.int32),
         # per-slot attention-window base: slot b attends cache positions
         # [start[b], pos].  0 for whole-batch generation; the continuous-
         # batching engine bumps it when a slot is re-issued mid-flight.
@@ -690,3 +787,28 @@ def cache_decls(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
         decls["cross_v"] = ParamDecl((L, batch, max_seq, KV, hd), kv_axes,
                                      "zeros", bf)
     return decls
+
+
+def paged_cache_decls(cfg: ArchConfig, batch: int, max_blocks: int,
+                      page_size: int, num_pages: int) -> Dict[str, Any]:
+    """Paged decode cache: a shared page pool (num_pages, page, KV, hd) per
+    layer plus a per-slot block table and per-slot lengths — NO shared
+    position, NO start window.  Page 0 is the reserved null page (never
+    allocated; inactive slots' appends and unallocated table entries land
+    there).  The pool is sharded over its page axis ('cache_seq'), the
+    flash-decoding seq-sharding of the dense cache carried over page-wise."""
+    if cfg.mamba_version or cfg.is_encoder_decoder:
+        raise ValueError("paged KV cache requires a decoder-only attention "
+                         "LM (per-slot page tables)")
+    hd, KV, L = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+    pool_axes = (None, "cache_seq", None, None, None)
+    bf = cfg.param_dtype
+    return {
+        "k": ParamDecl((L, num_pages, page_size, KV, hd), pool_axes,
+                       "zeros", bf),
+        "v": ParamDecl((L, num_pages, page_size, KV, hd), pool_axes,
+                       "zeros", bf),
+        "table": ParamDecl((batch, max_blocks), ("batch", None), "zeros",
+                           jnp.int32),
+        "length": ParamDecl((batch,), ("batch",), "zeros", jnp.int32),
+    }

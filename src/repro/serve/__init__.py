@@ -1,1 +1,3 @@
-from repro.serve.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    ContinuousBatchingEngine, PagedEngine, PagedKVCache, ServeConfig,
+    ServingEngine)

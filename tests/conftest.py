@@ -1,14 +1,39 @@
 """Shared test config.
 
-The container image does not ship ``hypothesis``; rather than losing every
-test in the property-test modules at collection time, install a minimal shim
-that SKIPS @given tests and leaves the plain parametrized tests running.
-When hypothesis is available the shim is inert.
+Two pieces:
+
+  * a ``slow`` marker (+ ``--runslow`` flag): the paged-cache property
+    harness runs a short fuzz profile under tier-1 and a long profile
+    (thousands of randomized schedule steps) only when asked —
+    ``pytest --runslow -m slow`` runs just the long profiles.
+  * the container image does not ship ``hypothesis``; rather than losing
+    every test in the property-test modules at collection time, install a
+    minimal shim that SKIPS @given tests and leaves the plain parametrized
+    tests running.  When hypothesis is available the shim is inert.
 """
 import sys
 import types
 
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked slow (long fuzz profiles)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-profile fuzz/bench tests (run with --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow profile (use --runslow)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 try:
     import hypothesis  # noqa: F401

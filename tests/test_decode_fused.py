@@ -1,8 +1,10 @@
 """Fused decode subsystem tests: decode_many vs the legacy per-token loop
 (greedy AND seeded temperature must be token-identical), Pallas
-decode-attention vs the jnp reference in interpret mode, per-slot stop
-conditions, slot release/join in the continuous-batching engine, and the
-census-ability of the fused decode program."""
+decode-attention (dense AND paged) vs the jnp references in interpret mode,
+per-slot stop conditions, slot release/join in the continuous-batching
+engine, the lockstep row-wraparound fix, and the census-ability of the
+fused/paged decode programs (paged transaction count scales with live
+tokens, not max_seq)."""
 import dataclasses
 
 import numpy as np
@@ -13,7 +15,7 @@ import pytest
 from repro.configs import get
 from repro.models import get_model
 from repro.serve.engine import (
-    ContinuousBatchingEngine, ServeConfig, ServingEngine)
+    ContinuousBatchingEngine, PagedEngine, ServeConfig, ServingEngine)
 
 
 @pytest.fixture(scope="module")
@@ -128,6 +130,81 @@ def test_decode_attention_no_start_mask():
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# paged Pallas decode attention vs the jnp gather oracle
+# ---------------------------------------------------------------------------
+
+def _paged_case(seed, B, H, KV, D, page, NB, L, extra_pages=3):
+    """Random pool + a block table of DISTINCT non-null pages per slot +
+    ragged per-slot lengths (deliberately not multiples of ``page``)."""
+    rng = np.random.RandomState(seed)
+    P = B * NB + extra_pages
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (L, P, page, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (L, P, page, KV, D), jnp.float32)
+    tbl = rng.permutation(np.arange(1, P))[:B * NB].reshape(B, NB)
+    lens = rng.randint(1, NB * page + 1, size=B)
+    layer = rng.randint(0, L)
+    return (q, kp, vp, jnp.asarray(tbl, jnp.int32),
+            jnp.asarray(lens, jnp.int32), layer)
+
+
+@pytest.mark.parametrize("B,H,KV,D,page,NB,L", [
+    (2, 4, 2, 16, 8, 3, 2),       # GQA group 2, multi-layer pool
+    (3, 4, 1, 16, 16, 2, 1),      # MQA (group 4)
+    (1, 8, 8, 32, 8, 4, 3),       # MHA (group 1)
+    (2, 6, 2, 32, 16, 2, 2),      # group 3, page !| kv_len
+    (2, 4, 2, 16, 1, 5, 1),       # degenerate single-row pages
+])
+def test_paged_decode_attention_matches_gather_oracle(B, H, KV, D, page,
+                                                      NB, L):
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    q, kp, vp, tbl, lens, layer = _paged_case(B + H, B, H, KV, D, page,
+                                              NB, L)
+    assert any(int(x) % page for x in lens) or page == 1, \
+        "case must exercise a partially-filled page"
+    got = paged_decode_attention(q, kp, vp, tbl, lens, layer,
+                                 interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, tbl, lens, layer)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_oracle_matches_dense_on_packed_pages():
+    """Oracle-of-oracle: hand-pack a contiguous (B, T, KV, D) cache into
+    pages; the gather oracle must equal the dense direct attention with the
+    same per-slot lengths."""
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    from repro.models.attention import direct_attention
+    B, H, KV, D, page, NB = 2, 4, 2, 16, 8, 3
+    T = page * NB
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, D), jnp.float32)
+    # pack slot b's rows into pages 1 + b*NB + j (order scrambled per slot)
+    rng = np.random.RandomState(3)
+    P = 1 + B * NB
+    kp = np.zeros((1, P, page, KV, D), np.float32)
+    vp = np.zeros_like(kp)
+    tbl = np.zeros((B, NB), np.int32)
+    pages = 1 + rng.permutation(B * NB)
+    for b in range(B):
+        for j in range(NB):
+            pg = pages[b * NB + j]
+            tbl[b, j] = pg
+            kp[0, pg] = np.asarray(k)[b, j * page:(j + 1) * page]
+            vp[0, pg] = np.asarray(v)[b, j * page:(j + 1) * page]
+    lens = jnp.asarray([T - 3, page + 1], jnp.int32)      # ragged, page !| len
+    got = paged_decode_attention_ref(q, jnp.asarray(kp), jnp.asarray(vp),
+                                     jnp.asarray(tbl), lens)
+    want = direct_attention(q, k, v, causal=False, kv_len=lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_pallas_decode_path_token_identical(small_model):
     """Whole serving path with cfg.attention_impl='pallas' (kernel inside
     the layer scan inside decode_many) vs the jnp reference path."""
@@ -198,6 +275,180 @@ def test_continuous_rejects_ssm():
 
 
 # ---------------------------------------------------------------------------
+# paged engine: pallas path + fused-vs-stepwise + sampling discipline
+# ---------------------------------------------------------------------------
+
+def test_paged_pallas_path_token_identical(small_model):
+    """Whole paged serving path with cfg.attention_impl='pallas' (paged
+    kernel inside the layer scan inside decode_many_paged) vs the jnp
+    gather-oracle path."""
+    model, params = small_model
+    model_pl = get_model(dataclasses.replace(model.cfg,
+                                             attention_impl="pallas"))
+    sc = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=5, page_size=8,
+                     prefill_chunk=3)
+    prompts = _prompts(model, n=3)
+    outs = []
+    for m in (model, model_pl):
+        pe = PagedEngine(m, params, sc)
+        rids = [pe.submit(p) for p in prompts]
+        res = pe.run()
+        outs.append([res[r] for r in rids])
+    assert outs[0] == outs[1]
+
+
+def test_decode_many_paged_matches_stepwise_temperature(small_model):
+    """The fused paged scan and a per-step decode_step_paged loop must be
+    token-identical under seeded temperature sampling (same key-split
+    discipline), including forced-token overrides."""
+    from repro.models.model import sample_token
+    model, params = small_model
+    B, steps, page, nb, pool = 2, 5, 4, 4, 9
+    forced = np.zeros((steps, B), np.int32)
+    fmask = np.zeros((steps, B), bool)
+    forced[0] = [7, 9]
+    fmask[0] = [True, True]
+    active = jnp.ones((B,), bool)
+    tok0 = jnp.asarray([[3], [4]], jnp.int32)
+
+    def fresh():
+        cache = model.init_paged_cache(B, nb, page, pool)
+        tbl = np.zeros((B, nb), np.int32)
+        tbl[0] = [1, 2, 3, 4]
+        tbl[1] = [5, 6, 7, 8]
+        return dict(cache, table=jnp.asarray(tbl))
+
+    key = jax.random.key(42)
+    toks_f, cache_f, _ = model.decode_many_paged(
+        params, tok0, fresh(), key, active, jnp.asarray(forced),
+        jnp.asarray(fmask), num_steps=steps, temperature=0.8)
+
+    cache = fresh()
+    tok = tok0
+    rows = []
+    for s in range(steps):
+        logits, cache = model.decode_step_paged(params, tok, cache, active)
+        nxt, key = sample_token(logits, key, 0.8)
+        nxt = jnp.where(jnp.asarray(fmask[s]), jnp.asarray(forced[s]), nxt)
+        rows.append(np.asarray(nxt))
+        tok = nxt[:, None]
+    np.testing.assert_array_equal(np.asarray(toks_f), np.stack(rows))
+    np.testing.assert_array_equal(np.asarray(cache_f["length"]),
+                                  np.asarray(cache["length"]))
+    assert list(np.asarray(cache_f["length"])) == [steps, steps]
+
+
+def test_decode_step_paged_inactive_slot_frozen(small_model):
+    """An inactive slot must not advance its length and must not perturb
+    any live page (its append lands on the null page 0)."""
+    model, params = small_model
+    B, page, nb, pool = 2, 4, 2, 5
+    cache = model.init_paged_cache(B, nb, page, pool)
+    tbl = np.zeros((B, nb), np.int32)
+    tbl[0] = [1, 2]
+    cache["table"] = jnp.asarray(tbl)
+    cache["length"] = jnp.asarray([3, 0], jnp.int32)
+    active = jnp.asarray([True, False])
+    before_k = np.asarray(cache["k"])
+    _, cache2 = jax.jit(model.decode_step_paged)(
+        params, jnp.zeros((B, 1), jnp.int32), cache, active)
+    assert list(np.asarray(cache2["length"])) == [4, 0]
+    after_k = np.asarray(cache2["k"])
+    np.testing.assert_array_equal(before_k[:, 2:], after_k[:, 2:])  # pages >= 2
+    assert not np.array_equal(before_k[:, 1], after_k[:, 1])        # slot 0 wrote
+
+
+# ---------------------------------------------------------------------------
+# lockstep start-window leak / row wraparound (the ROADMAP fix)
+# ---------------------------------------------------------------------------
+
+def test_lockstep_wraparound_no_start_leak():
+    """REGRESSION (pre-fix: RuntimeError 'KV cache exhausted'): a long-lived
+    lockstep engine must survive past max_seq total rows via row wraparound,
+    and a slot admitted at any engine step must not read rows < start even
+    after wraparound.  rope_theta=0 makes attention position-free, so ANY
+    leak of a previous occupant's rows changes the softmax and breaks exact
+    token-identity with the fresh-run oracle."""
+    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), rope_theta=0.0)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    cbe = ContinuousBatchingEngine(model, params,
+                                   ServeConfig(max_batch=2, max_seq=32,
+                                               max_new_tokens=4))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           size=rng.randint(5, 10)).astype(np.int32)
+               for _ in range(8)]
+    rids = [cbe.submit(p) for p in prompts]
+    res = cbe.run()
+    assert cbe.wraps >= 1, "schedule must actually wrap to regress the leak"
+    oracle = ServingEngine(model, params,
+                           ServeConfig(max_batch=1, max_seq=32,
+                                       max_new_tokens=4))
+    for rid, p in zip(rids, prompts):
+        assert res[rid] == oracle.generate_batch([p])[0], \
+            f"rid={rid}: read rows outside its window after wraparound"
+
+
+def test_lockstep_wraparound_rope_positions_absolute(small_model):
+    """The wrap slides cache ROWS but must NOT rebase rope positions:
+    pos_base keeps the rotation stream absolute, so decoding from the
+    shifted cache yields the same logits as from the unshifted one."""
+    model, params = small_model
+    cbe = ContinuousBatchingEngine(model, params,
+                                   ServeConfig(max_batch=2, max_seq=32,
+                                               max_new_tokens=4))
+    rng = np.random.RandomState(11)
+    for _ in range(10):
+        cbe.submit(rng.randint(0, model.cfg.vocab_size,
+                               size=rng.randint(5, 9)).astype(np.int32))
+    while cbe.pos + 1 < cbe.cfg.max_seq:         # run up to the wrap point
+        cbe.step()
+        assert cbe.busy, "schedule drained before reaching max_seq"
+    snap = {k: jnp.array(v) for k, v in cbe.cache.items()}   # pre-wrap copy
+    feed = jnp.asarray(cbe._feed)[:, None]
+    cbe._wrap()
+    shift = int(snap["pos"]) - int(cbe.cache["pos"])
+    assert shift > 0
+    assert int(cbe.cache["pos_base"]) == int(snap["pos_base"]) + shift
+    step = jax.jit(model.decode_step)
+    logits_pre, _ = step(params, feed, snap)
+    logits_post, _ = step(params, feed, cbe.cache)
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_post), rtol=2e-4, atol=2e-4)
+
+
+def test_lockstep_wraparound_survives_with_rope(small_model):
+    """With rope on, the wrapped engine still completes every request and
+    wraps at least once (token-identity is covered by the rope-free test:
+    rope outputs differ from a fresh run only in absolute phase)."""
+    model, params = small_model
+    cbe = ContinuousBatchingEngine(model, params,
+                                   ServeConfig(max_batch=2, max_seq=32,
+                                               max_new_tokens=4))
+    rng = np.random.RandomState(4)
+    rids = [cbe.submit(rng.randint(0, model.cfg.vocab_size,
+                                   size=rng.randint(5, 10)).astype(np.int32))
+            for _ in range(8)]
+    res = cbe.run()
+    assert cbe.wraps >= 1
+    assert set(res) == set(rids)
+    assert all(len(res[r]) == 4 for r in rids)
+
+
+def test_lockstep_wrap_raises_when_active_slot_spans_row0(small_model):
+    """A single request longer than max_seq can never be wrapped away: the
+    engine must still fail loudly (and point at the paged engine)."""
+    model, params = small_model
+    cbe = ContinuousBatchingEngine(model, params,
+                                   ServeConfig(max_batch=1, max_seq=12,
+                                               max_new_tokens=32))
+    cbe.submit(np.arange(5, dtype=np.int32))
+    with pytest.raises(RuntimeError, match="PagedEngine"):
+        cbe.run()
+
+
+# ---------------------------------------------------------------------------
 # the fused decode cell is censusable (the PR's motivation)
 # ---------------------------------------------------------------------------
 
@@ -221,6 +472,50 @@ def test_fused_decode_program_census(small_model):
     # must scale with num_steps x n_layers, far above a single step's
     single = model.cfg.n_layers * 2 * model.cfg.d_model
     assert census.mxu_flops > single
+
+
+def test_paged_decode_census_scales_with_live_tokens():
+    """The roofline claim the paged cache exists to make measurable: the
+    paged decode step's transaction count scales with LIVE tokens (block-
+    table width), not with the pool / max_seq.  Two fills of each cache
+    flavor, byte-count ratios asserted.  f32 config: the CPU backend wraps
+    bf16 scatters in full-pool converts that would pollute the traffic
+    model (TPU scatters natively)."""
+    from repro.core.hlo_counters import census_from_compiled
+    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), dtype="float32")
+    model = get_model(cfg)
+    B, page = 2, 16
+
+    def paged(nb, pool):
+        cache = model.abstract_paged_cache(B, nb, page, pool)
+        compiled = jax.jit(lambda p, t, c: model.decode_step_paged(p, t, c),
+                           donate_argnums=(2,)).lower(
+            model.abstract_params(), jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            cache).compile()
+        return census_from_compiled(compiled)
+
+    def dense_cache(max_seq):
+        cache = model.abstract_cache(B, max_seq)
+        compiled = jax.jit(model.decode_step, donate_argnums=(2,)).lower(
+            model.abstract_params(), jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            cache).compile()
+        return census_from_compiled(compiled)
+
+    p_small_pool = paged(2, 33)           # 2 live blocks, 512-row pool
+    p_big_pool = paged(2, 65)             # 2 live blocks, 1024-row pool
+    p_more_live = paged(8, 65)            # 8 live blocks, 1024-row pool
+    d_512, d_1024 = dense_cache(512), dense_cache(1024)
+
+    # fill 1 vs fill 2, paged: doubling the POOL moves zero extra bytes
+    assert p_big_pool.hbm_bytes == p_small_pool.hbm_bytes
+    assert p_big_pool.irregular_bytes == p_small_pool.irregular_bytes
+    # more LIVE blocks do move more bytes (gather grows with the table)
+    assert p_more_live.hbm_bytes > p_big_pool.hbm_bytes
+    assert p_more_live.irregular_bytes > 3 * p_big_pool.irregular_bytes
+    # fill 1 vs fill 2, dense: bytes track max_seq whether or not it is live
+    assert d_1024.hbm_bytes > 1.5 * d_512.hbm_bytes
+    # and at equal capacity the paged step moves a fraction of the dense one
+    assert d_1024.hbm_bytes > 2 * p_big_pool.hbm_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,255 @@
+"""Property-test harness for the paged serving path.
+
+Randomized admit/finish/join schedules drive the non-lockstep ``PagedEngine``
+(mixed prompt lengths and budgets, staggered submissions, mid-flight joins,
+random defrags) and assert two properties after every engine tick:
+
+  * SAFETY — the page free list never double-allocates or leaks: the null
+    page + every slot's owned pages + the free list partition the pool
+    exactly (``PagedKVCache.check()``);
+  * CORRECTNESS — every request's output is token-identical to a fresh
+    dense-cache ``ServingEngine`` run of the same prompt (the oracle): the
+    paged engine's per-slot positions mean a request admitted mid-flight
+    decodes exactly like a batch-of-one run from position 0.
+
+Runs a SHORT fuzz profile (>= 200 randomized engine steps across seeds)
+under tier-1; the LONG profile is ``@pytest.mark.slow``
+(``pytest --runslow``).  Written as explicit seeded fuzz loops because the
+container image has no hypothesis; with hypothesis present these would be
+``@given`` schedules.
+
+Prompt lengths and budgets are drawn from small sets so the oracle's
+compile universe stays bounded (one prefill per distinct prompt length, one
+decode_many per distinct budget).
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get
+from repro.models import get_model
+from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
+
+PROMPT_LENS = (3, 5, 8)
+BUDGETS = (3, 5)
+
+
+@pytest.fixture(scope="module")
+def harness():
+    cfg = get("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    oracle = ServingEngine(model, params,
+                           ServeConfig(max_batch=1, max_seq=64,
+                                       max_new_tokens=max(BUDGETS)))
+    return model, params, oracle
+
+
+def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
+                   n_requests: int, *, max_batch=3, page_size=4,
+                   prefill_chunk=3, defrag_every=0) -> int:
+    """One randomized schedule; returns engine ticks run.  Asserts the
+    free-list invariants every tick and oracle token-identity at the end."""
+    rng = np.random.RandomState(seed)
+    cfg = model.cfg
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=max_batch, max_seq=48,
+                                 max_new_tokens=max(BUDGETS),
+                                 page_size=page_size,
+                                 prefill_chunk=prefill_chunk))
+    submitted = {}
+    for it in range(10 * min_ticks + 10 * n_requests + 100):
+        # keep the schedule alive until BOTH the request count and the tick
+        # count are met — late submissions are exactly the mid-flight joins
+        # the harness exists to fuzz
+        want_more = (len(submitted) < n_requests
+                     or pe.steps_run < min_ticks)
+        if want_more and rng.rand() < 0.6:
+            for _ in range(rng.randint(1, 3)):
+                p = rng.randint(0, cfg.vocab_size,
+                                size=rng.choice(PROMPT_LENS)
+                                ).astype(np.int32)
+                b = int(rng.choice(BUDGETS))
+                submitted[pe.submit(p, b)] = (p, b)
+        if pe.busy:
+            pe.step()
+            pe.kv.check()                     # no double-alloc, no leak
+        if defrag_every and pe.steps_run and \
+                pe.steps_run % defrag_every == 0:
+            pe.defrag()
+            pe.kv.check()
+        if len(submitted) >= n_requests and not pe.busy \
+                and pe.steps_run >= min_ticks:
+            break
+    res = pe.run()
+    pe.kv.check()
+    # eviction returns every page: nothing live, nothing leaked after drain
+    assert pe.kv.live_pages == 0
+    assert len(pe.kv.free) == pe.kv.num_pages - 1
+    assert set(res) == set(submitted)
+    assert pe.joins == len(submitted)
+    for rid, (p, b) in submitted.items():
+        want = oracle.generate_batch([p], max_new_tokens=b)[0]
+        assert res[rid] == want, f"seed={seed} rid={rid}: paged output " \
+            f"diverged from the fresh dense-cache oracle"
+    return pe.steps_run
+
+
+# ---------------------------------------------------------------------------
+# short profile (tier-1): >= 200 randomized engine steps across seeds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,defrag_every", [(0, 0), (1, 5), (2, 3)])
+def test_fuzz_schedule_token_identical(harness, seed, defrag_every):
+    model, params, oracle = harness
+    ticks = _fuzz_schedule(model, params, oracle, seed, min_ticks=67,
+                           n_requests=12, defrag_every=defrag_every)
+    assert ticks >= 67                        # 3 seeds x 67 >= 200 steps
+
+
+def test_fuzz_single_slot_chunked(harness):
+    """max_batch=1 with chunk > prompt: the pure chunked-prefill path."""
+    model, params, oracle = harness
+    _fuzz_schedule(model, params, oracle, seed=7, min_ticks=20,
+                   n_requests=6, max_batch=1, prefill_chunk=6)
+
+
+def test_fuzz_page_size_one(harness):
+    """page_size=1 maximizes allocation churn (one page per token)."""
+    model, params, oracle = harness
+    _fuzz_schedule(model, params, oracle, seed=11, min_ticks=25,
+                   n_requests=5, max_batch=2, page_size=1, prefill_chunk=2)
+
+
+# ---------------------------------------------------------------------------
+# long profile (manual): pytest --runslow
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [101, 202])
+def test_fuzz_schedule_long(harness, seed):
+    model, params, oracle = harness
+    ticks = _fuzz_schedule(model, params, oracle, seed, min_ticks=500,
+                           n_requests=60, defrag_every=7)
+    assert ticks >= 500
+
+
+# ---------------------------------------------------------------------------
+# targeted edge cases
+# ---------------------------------------------------------------------------
+
+def test_eos_truncates_like_oracle(harness):
+    """eos sampled mid-stream finishes the slot with the same truncation
+    rule as the dense oracle."""
+    model, params, _ = harness
+    prompt = np.random.RandomState(5).randint(
+        0, model.cfg.vocab_size, size=5).astype(np.int32)
+    # pick an eos the model actually emits: the 2nd greedy token
+    probe = ServingEngine(model, params,
+                          ServeConfig(max_batch=1, max_seq=32,
+                                      max_new_tokens=4))
+    eos = probe.generate_batch([prompt])[0][1]
+    sc = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=6, eos_id=eos,
+                     page_size=4, prefill_chunk=3)
+    pe = PagedEngine(model, params, sc)
+    rid = pe.submit(prompt)
+    res = pe.run()
+    want = ServingEngine(model, params,
+                         ServeConfig(max_batch=1, max_seq=32,
+                                     max_new_tokens=6, eos_id=eos)
+                         ).generate_batch([prompt])[0]
+    assert res[rid] == want
+    assert res[rid][-1] == eos and len(res[rid]) == 2
+
+
+def test_stall_recovers_via_eviction(harness):
+    """A slot that cannot get chunk capacity stalls (active=False for the
+    tick) and resumes after another slot finishes and its pages are
+    evicted — no deadlock, outputs still oracle-identical."""
+    model, params, oracle = harness
+    # 3 allocatable pages, two slots each eventually needing 2 pages
+    sc = ServeConfig(max_batch=2, max_seq=8, max_new_tokens=5, page_size=4,
+                     num_pages=4, prefill_chunk=2)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(9)
+    prompts = [rng.randint(0, model.cfg.vocab_size, size=3).astype(np.int32)
+               for _ in range(2)]
+    rids = [pe.submit(p) for p in prompts]
+    res = pe.run()
+    assert pe.stalls > 0
+    for rid, p in zip(rids, prompts):
+        assert res[rid] == oracle.generate_batch([p], max_new_tokens=5)[0]
+
+
+def test_chunk_reservation_capped_at_remaining_work(harness):
+    """REGRESSION: step() must reserve pages for the slot's REMAINING work,
+    not the whole prefill_chunk — a fitting request (1 page of real work)
+    with chunk 8 on a 1-page pool must complete, not raise pool-exhausted.
+    The chunk overshoot lands on the null page and is discarded."""
+    model, params, oracle = harness
+    sc = ServeConfig(max_batch=1, max_seq=16, max_new_tokens=1, page_size=4,
+                     num_pages=2, prefill_chunk=8)   # 1 allocatable page
+    pe = PagedEngine(model, params, sc)
+    prompt = np.arange(3, dtype=np.int32)
+    rid = pe.submit(prompt)
+    res = pe.run()
+    assert res[rid] == oracle.generate_batch([prompt],
+                                             max_new_tokens=1)[0]
+
+
+def test_pool_exhaustion_raises(harness):
+    """A workload no eviction can ever unblock raises instead of spinning."""
+    model, params, _ = harness
+    sc = ServeConfig(max_batch=1, max_seq=8, max_new_tokens=5, page_size=4,
+                     num_pages=2, prefill_chunk=4)   # 1 allocatable page
+    pe = PagedEngine(model, params, sc)
+    pe.submit(np.arange(3, dtype=np.int32))
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        pe.run()
+
+
+def test_oversize_request_raises(harness):
+    model, params, _ = harness
+    sc = ServeConfig(max_batch=1, max_seq=8, max_new_tokens=12, page_size=4)
+    pe = PagedEngine(model, params, sc)          # max_blocks = 2 (8 tokens)
+    pe.submit(np.arange(5, dtype=np.int32))      # 5 + 12 > 8
+    with pytest.raises(RuntimeError, match="max_blocks"):
+        pe.run()
+
+
+def test_paged_rejects_empty_prompt(harness):
+    model, params, _ = harness
+    pe = PagedEngine(model, params, ServeConfig(max_batch=1, max_seq=16))
+    with pytest.raises(ValueError):
+        pe.submit(np.array([], np.int32))
+
+
+def test_paged_rejects_ssm():
+    cfg = get("falcon-mamba-7b").reduced()
+    model = get_model(cfg)
+    with pytest.raises(ValueError):
+        PagedEngine(model, None, ServeConfig(max_batch=2, max_seq=32))
+
+
+def test_defrag_compacts_to_prefix(harness):
+    """After defrag the live pages occupy the contiguous pool prefix and
+    the free list is exactly the tail."""
+    model, params, _ = harness
+    sc = ServeConfig(max_batch=3, max_seq=32, max_new_tokens=5, page_size=2,
+                     prefill_chunk=2)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(13)
+    for _ in range(5):
+        pe.submit(rng.randint(0, model.cfg.vocab_size,
+                              size=4).astype(np.int32))
+    for _ in range(4):                           # churn: some finish, some join
+        if pe.busy:
+            pe.step()
+    pe.defrag()
+    pe.kv.check()
+    live = pe.kv.live_pages
+    owned = sorted(p for o in pe.kv.owned for p in o)
+    assert owned == list(range(1, live + 1))
+    assert sorted(pe.kv.free) == list(range(live + 1, pe.kv.num_pages))
+    res = pe.run()                               # still drains correctly
+    assert len(res) == 5
