@@ -1,19 +1,33 @@
 """Serving micro-benchmark: batched decode throughput at smoke scale (the
 decode_32k cells' runnable counterpart).
 
-Two scenarios (``--scenario smoke|ragged|all``):
+Three scenarios (``--scenario smoke|ragged|shared-prefix|all``):
 
   * smoke — the fused device-resident ``decode_many`` loop against the
-    legacy per-token host loop (both with donated caches), plus the
-    lockstep continuous-batching engine's end-to-end tokens/s.
+    legacy per-token host loop (both with donated caches), plus the paged
+    continuous-batching engine's end-to-end tokens/s (2x batch requests
+    over batch slots, mid-flight joins).
   * ragged — continuous batching under a RAGGED workload (mixed prompt and
     output lengths, mid-flight joins: 3x batch requests over batch slots):
-    the non-lockstep paged engine (chunked prefill through the fused decode
-    cell) against the lockstep dense engine at equal ``max_seq``, reporting
-    tokens/s and page-pool utilization.
+    the non-lockstep paged engine (chunked prefill through the fused
+    decode cell) against the DENSE LOCKSTEP baseline at equal ``max_seq``
+    — the retired lockstep engine's discipline (one shared cache
+    position, per-slot start windows, prompts prefilled BY DECODE one
+    token per shared step), reconstructed here as a measurement-only
+    driver so the ``ragged_paged_speedup`` trajectory stays comparable
+    across PRs.  Page-pool utilization and row occupancy are recorded PER
+    TICK from the engine's traces and reduced to mean/max across the
+    drive's ticks (the old numbers sampled only the end state); the
+    utilization stats come from a second, untimed drive with periodic
+    defrag so they describe the compacted pool.
+  * shared-prefix — a common system prompt across all requests (3x batch
+    over batch slots): prefix-sharing paged vs the same engine with
+    sharing disabled at EQUAL pool size, recording tokens/s and the
+    logical-vs-physical token ratio (tokens resident by reference /
+    tokens physically written) plus copy-on-write page-copy counts.
 
 ``--json`` writes BENCH_serve.json so the perf trajectory is tracked across
-PRs.
+PRs (scripts/verify.sh gates on it).
 """
 from __future__ import annotations
 
@@ -27,45 +41,161 @@ import jax
 import numpy as np
 
 SMOKE = dict(arch="granite-8b", batch=4, seq=128, steps=8)
+# prefill_chunk 6 (was 4): the tick scheduler's partial grants removed the
+# all-or-nothing stall risk of bigger chunks, and 6 amortizes the per-tick
+# host turnaround best on the CPU smoke config
 RAGGED = dict(arch="granite-8b", batch=4, max_seq=192, requests=12,
               prompt_lo=4, prompt_hi=24, out_lo=4, out_hi=16,
+              page_size=16, prefill_chunk=6, defrag_every=8)
+# sys_prompt 48 = 3 exact pages: a PAGE-ALIGNED shared prefix needs no
+# copy-on-write at all (every shared page is full; the first fresh append
+# opens a new block), so cow_copies records 0 here — measured guidance:
+# align shared system prompts to page_size; a mid-page prefix (e.g. 50)
+# copy-on-writes one page per sharer and costs ~15% tokens/s on this
+# config (the COW path itself is census/property-tested in tier-1)
+SHARED = dict(arch="granite-8b", batch=4, max_seq=96, requests=12,
+              sys_prompt=48, tail_lo=4, tail_hi=12, out_lo=4, out_hi=10,
               page_size=16, prefill_chunk=4)
 
 
-def _engine():
+def _model(arch):
     from repro.configs import get
     from repro.models import get_model
-    from repro.serve.engine import ServeConfig, ServingEngine
-    cfg = get(SMOKE["arch"]).reduced()
+    cfg = get(arch).reduced()
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
-    eng = ServingEngine(model, params,
-                        ServeConfig(max_batch=SMOKE["batch"],
-                                    max_seq=SMOKE["seq"]))
-    return cfg, model, params, eng
+    return cfg, model, params
 
 
 def run() -> Dict[str, float]:
-    cfg, model, params, eng = _engine()
+    from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
+    cfg, model, params = _model(SMOKE["arch"])
+    eng = ServingEngine(model, params,
+                        ServeConfig(max_batch=SMOKE["batch"],
+                                    max_seq=SMOKE["seq"]))
     stats = dict(eng.benchmark_decode(batch=SMOKE["batch"], seq=SMOKE["seq"],
                                       steps=SMOKE["steps"]))
 
     # continuous batching end-to-end: 2x batch requests over batch slots
-    from repro.serve.engine import ContinuousBatchingEngine, ServeConfig
-    cbe = ContinuousBatchingEngine(
-        model, params, ServeConfig(max_batch=SMOKE["batch"], max_seq=256,
-                                   max_new_tokens=8))
+    # (chunk 8 amortizes the per-tick host turnaround at smoke scale)
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=SMOKE["batch"], max_seq=256,
+                                 max_new_tokens=8, prefill_chunk=8,
+                                 prefix_sharing=False))
     rng = np.random.RandomState(0)
     for _ in range(2 * SMOKE["batch"]):
-        cbe.submit(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32))
-    cbe.step()                                   # compile
+        pe.submit(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32))
+    pe.step()                                    # compile
+    # the warm tick already emitted some output tokens: count only tokens
+    # produced inside the timed window (tokens_out delta, kept tokens)
+    tok0 = pe.tokens_out
     t0 = time.perf_counter()
-    results = cbe.run()
+    pe.run()
     dt = time.perf_counter() - t0
-    n_tok = sum(len(v) for v in results.values())
-    stats["continuous_tokens_per_s"] = n_tok / max(dt, 1e-9)
-    stats["continuous_joins"] = float(cbe.joins)
+    stats["continuous_tokens_per_s"] = (pe.tokens_out - tok0) / max(dt, 1e-9)
+    stats["continuous_joins"] = float(pe.joins)
     return stats
+
+
+def _drive(engine, reqs, defrag_every: int = 0) -> Dict[str, float]:
+    """Submit a workload against a warm engine and time the drain, with an
+    optional periodic defrag.  Tokens/joins/utilization are counted for
+    THIS drive's ticks only (counters and traces accumulate across drives
+    — the warm-up run must not leak into the timed window)."""
+    joins0, ticks0 = engine.joins, engine.steps_run
+    stalls0 = engine.stalls
+    appended0, shared0 = engine.tokens_appended, engine.shared_tokens
+    cow0 = engine.kv.cow_copies
+    rids = [engine.submit(p, mnt) for p, mnt in reqs]
+    t0 = time.perf_counter()
+    while engine.busy:
+        engine.step()
+        if defrag_every and (engine.steps_run - ticks0) % defrag_every == 0:
+            engine.defrag()
+    dt = time.perf_counter() - t0
+    results = engine.results
+    n_tok = sum(len(results[r]) for r in rids)
+    util = engine.util_trace[ticks0:]
+    occ = engine.occupancy_trace[ticks0:]
+    appended = engine.tokens_appended - appended0
+    shared = engine.shared_tokens - shared0
+    return {"tokens": float(n_tok), "seconds": dt,
+            "tokens_per_s": n_tok / max(dt, 1e-9),
+            "joins": float(engine.joins - joins0),
+            "stalls": float(engine.stalls - stalls0),
+            "util_mean": float(np.mean(util)) if util else 0.0,
+            "util_max": float(np.max(util)) if util else 0.0,
+            "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "cow_copies": float(engine.kv.cow_copies - cow0),
+            "shared_tokens": float(shared),
+            "logical_physical_ratio": (appended + shared) / max(1, appended)}
+
+
+def _drive_dense_lockstep(model, params, reqs, batch: int,
+                          max_seq: int) -> Dict[str, float]:
+    """Dense lockstep continuous-batching baseline — the retired lockstep
+    engine's discipline, reconstructed as a measurement-only driver: all
+    slots advance in LOCKSTEP over one shared dense cache position,
+    prompts are prefilled BY DECODE (one token per shared step through
+    the same compiled decode step), a joining request's ``start`` window
+    masks the previous occupant's rows, and burned rows are never
+    reclaimed (the workload must fit ``max_seq`` — exactly the limitation
+    that retired the engine; the paged engine has no such bound)."""
+    import jax.numpy as jnp
+    from repro.models.model import sample_token
+
+    def step_fn(params, tok, cache, key, forced_tok, forced_mask):
+        logits, cache = model.decode_step(params, tok[:, None], cache)
+        s, key = sample_token(logits, key, 0.0)
+        return jnp.where(forced_mask, forced_tok, s), cache, key
+
+    step = jax.jit(step_fn, donate_argnums=(2, 3))
+
+    def drive():
+        cache = model.init_cache(batch, max_seq)
+        key = jax.random.key(0)
+        queue = [([int(t) for t in p], mnt) for p, mnt in reqs]
+        slots = [None] * batch            # [forced tokens, emitted, budget]
+        feed = np.zeros((batch,), np.int32)
+        pos, total = 0, 0
+        t0 = time.perf_counter()
+        while queue or any(slots):
+            for i in range(batch):
+                if slots[i] is None and queue:
+                    toks, mnt = queue.pop(0)
+                    slots[i] = [list(toks[1:]), 0, mnt]
+                    cache["start"] = cache["start"].at[i].set(pos)
+                    feed[i] = toks[0]
+            ftok = np.zeros((batch,), np.int32)
+            fmask = np.zeros((batch,), bool)
+            for i, s in enumerate(slots):
+                if s and s[0]:
+                    ftok[i] = s[0].pop(0)
+                    fmask[i] = True
+            nxt, cache, key = step(params, jnp.asarray(feed), cache, key,
+                                   jnp.asarray(ftok), jnp.asarray(fmask))
+            pos += 1
+            if pos + 1 >= max_seq:
+                raise RuntimeError("dense baseline exhausted max_seq")
+            nxt_np = np.asarray(nxt)
+            for i, s in enumerate(slots):
+                if not s:
+                    continue
+                if fmask[i]:
+                    feed[i] = nxt_np[i]
+                    continue
+                s[1] += 1
+                total += 1
+                if s[1] >= s[2]:
+                    slots[i] = None
+                else:
+                    feed[i] = nxt_np[i]
+        return total, time.perf_counter() - t0
+
+    drive()                               # compile
+    total, dt = min((drive() for _ in range(2)), key=lambda r: r[1])
+    return {"tokens": float(total), "seconds": dt,
+            "tokens_per_s": total / max(dt, 1e-9)}
 
 
 def _ragged_requests(cfg, rng) -> List:
@@ -77,43 +207,17 @@ def _ragged_requests(cfg, rng) -> List:
             for _ in range(r["requests"])]
 
 
-def _drive(engine, reqs) -> Dict[str, float]:
-    """Submit the ragged workload against a warm engine and time the drain.
-    Tokens/joins are counted for THIS drive's requests only (engine.results
-    and the join counter accumulate across drives — the warm-up run must
-    not leak into the timed window)."""
-    joins0 = engine.joins
-    rids = [engine.submit(p, mnt) for p, mnt in reqs]
-    t0 = time.perf_counter()
-    results = engine.run()
-    dt = time.perf_counter() - t0
-    n_tok = sum(len(results[r]) for r in rids)
-    return {"tokens": float(n_tok), "seconds": dt,
-            "tokens_per_s": n_tok / max(dt, 1e-9),
-            "joins": float(engine.joins - joins0)}
-
-
 def run_ragged() -> Dict[str, float]:
     """Ragged continuous batching: paged (non-lockstep, chunked prefill)
-    vs dense lockstep engine at equal max_seq."""
-    from repro.configs import get
-    from repro.models import get_model
-    from repro.serve.engine import (
-        ContinuousBatchingEngine, PagedEngine, ServeConfig)
+    vs the dense lockstep baseline at equal max_seq."""
+    from repro.serve.engine import PagedEngine, ServeConfig
     r = RAGGED
-    cfg = get(r["arch"]).reduced()
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0))
+    cfg, model, params = _model(r["arch"])
     rng = np.random.RandomState(0)
     reqs = _ragged_requests(cfg, rng)
     warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
 
-    dense = ContinuousBatchingEngine(
-        model, params, ServeConfig(max_batch=r["batch"],
-                                   max_seq=r["max_seq"]))
-    _drive(dense, warm)                              # compile
-    wraps0 = dense.wraps
-    d = _drive(dense, reqs)
+    d = _drive_dense_lockstep(model, params, reqs, r["batch"], r["max_seq"])
 
     paged = PagedEngine(
         model, params, ServeConfig(max_batch=r["batch"],
@@ -121,10 +225,14 @@ def run_ragged() -> Dict[str, float]:
                                    page_size=r["page_size"],
                                    prefill_chunk=r["prefill_chunk"]))
     _drive(paged, warm)                              # compile
-    util0, ticks0 = paged.util_sum, paged.steps_run  # exclude warm-up ticks
-    stalls0 = paged.stalls
-    paged.util_max = 0.0
-    p = _drive(paged, reqs)
+    # best of two timed drives (both sides of the comparison get the same
+    # treatment inside their drivers): container contention swings single
+    # CPU-smoke drives by ~15%, which would jitter the tracked trajectory
+    p = max((_drive(paged, reqs) for _ in range(2)),
+            key=lambda s: s["tokens_per_s"])
+    # untimed pass WITH periodic defrag: the utilization/occupancy stats
+    # describe the compacted pool
+    u = _drive(paged, reqs, defrag_every=r["defrag_every"])
 
     return {
         "ragged_tokens": p["tokens"],
@@ -133,11 +241,59 @@ def run_ragged() -> Dict[str, float]:
         "ragged_paged_speedup": p["tokens_per_s"] / max(d["tokens_per_s"],
                                                         1e-9),
         "ragged_joins_paged": p["joins"],
-        "ragged_page_util_mean": (paged.util_sum - util0)
-        / max(1, paged.steps_run - ticks0),
-        "ragged_page_util_max": paged.util_max,
-        "ragged_dense_wraps": float(dense.wraps - wraps0),
-        "ragged_paged_stalls": float(paged.stalls - stalls0),
+        "ragged_page_util_mean": u["util_mean"],
+        "ragged_page_util_max": u["util_max"],
+        "ragged_page_occupancy_mean": u["occupancy_mean"],
+        "ragged_paged_stalls": p["stalls"],
+    }
+
+
+def _shared_requests(cfg, rng) -> List:
+    s = SHARED
+    sys_prompt = rng.randint(0, cfg.vocab_size,
+                             size=s["sys_prompt"]).astype(np.int32)
+    return [(np.concatenate(
+                [sys_prompt,
+                 rng.randint(0, cfg.vocab_size,
+                             size=rng.randint(s["tail_lo"], s["tail_hi"] + 1)
+                             ).astype(np.int32)]),
+             int(rng.randint(s["out_lo"], s["out_hi"] + 1)))
+            for _ in range(s["requests"])]
+
+
+def run_shared() -> Dict[str, float]:
+    """Shared-prefix serving: a common system prompt across 3x batch
+    requests — prefix-sharing paged engine vs sharing disabled at equal
+    pool size."""
+    from repro.serve.engine import PagedEngine, ServeConfig
+    s = SHARED
+    cfg, model, params = _model(s["arch"])
+    rng = np.random.RandomState(0)
+    reqs = _shared_requests(cfg, rng)
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+
+    stats = {}
+    for name, sharing in (("shared", True), ("unshared", False)):
+        pe = PagedEngine(
+            model, params, ServeConfig(max_batch=s["batch"],
+                                       max_seq=s["max_seq"],
+                                       page_size=s["page_size"],
+                                       prefill_chunk=s["prefill_chunk"],
+                                       prefix_sharing=sharing))
+        _drive(pe, warm)                             # compile
+        stats[name] = max((_drive(pe, reqs) for _ in range(2)),
+                          key=lambda r: r["tokens_per_s"])
+
+    sh, un = stats["shared"], stats["unshared"]
+    return {
+        "shared_tokens_per_s": sh["tokens_per_s"],
+        "shared_tokens_per_s_unshared": un["tokens_per_s"],
+        "shared_speedup": sh["tokens_per_s"] / max(un["tokens_per_s"], 1e-9),
+        "shared_logical_physical_ratio": sh["logical_physical_ratio"],
+        "shared_prefix_tokens": sh["shared_tokens"],
+        "shared_cow_copies": sh["cow_copies"],
+        "shared_unshared_cow_copies": un["cow_copies"],
+        "shared_joins": sh["joins"],
     }
 
 
@@ -166,12 +322,24 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"mean={stats['ragged_page_util_mean']:.2f}"
             f"/max={stats['ragged_page_util_max']:.2f}",
         ]
+    if "shared_tokens_per_s" in stats:
+        lines += [
+            f"serve/shared-prefix,0,"
+            f"tokens_per_s={stats['shared_tokens_per_s']:.1f}",
+            f"serve/shared-prefix-unshared,0,"
+            f"tokens_per_s={stats['shared_tokens_per_s_unshared']:.1f}",
+            f"serve/shared-prefix-speedup,0,"
+            f"x{stats['shared_speedup']:.2f}",
+            f"serve/shared-prefix-ratio,0,"
+            f"logical/physical={stats['shared_logical_physical_ratio']:.2f}",
+        ]
     return lines
 
 
 def bench() -> List[str]:
     stats = run()
     stats.update(run_ragged())
+    stats.update(run_shared())
     return bench_lines_from(stats)
 
 
@@ -179,23 +347,27 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_serve.json next to the repo root")
-    ap.add_argument("--scenario", choices=("smoke", "ragged", "all"),
+    ap.add_argument("--scenario",
+                    choices=("smoke", "ragged", "shared-prefix", "all"),
                     default="all",
                     help="smoke: fused-vs-loop decode; ragged: paged vs "
-                         "dense continuous batching under mixed lengths")
+                         "dense waves under mixed lengths; shared-prefix: "
+                         "prefix sharing vs no sharing at equal pool")
     args = ap.parse_args()
     stats: Dict[str, float] = {}
     if args.scenario in ("smoke", "all"):
         stats.update(run())
     if args.scenario in ("ragged", "all"):
         stats.update(run_ragged())
+    if args.scenario in ("shared-prefix", "all"):
+        stats.update(run_shared())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
         path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serve.json")
         # merge over any existing record so a partial --scenario run never
-        # erases the other scenario's tracked trajectory
+        # erases the other scenarios' tracked trajectories
         record: Dict[str, object] = {}
         try:
             with open(os.path.abspath(path)) as f:
@@ -217,6 +389,10 @@ def main() -> int:
             record["ragged"] = dict(
                 config=RAGGED,
                 **{k: stats[k] for k in stats if k.startswith("ragged_")})
+        if args.scenario in ("shared-prefix", "all"):
+            record["shared_prefix"] = dict(
+                config=SHARED,
+                **{k: stats[k] for k in stats if k.startswith("shared_")})
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

@@ -1,5 +1,6 @@
-"""Serving demo: batched prefill + lockstep decode with a shared KV cache
-(continuous-batching style), on a reduced granite-8b.
+"""Serving demo on a reduced granite-8b: whole-batch fused decode, then the
+paged continuous-batching engine (per-slot positions, refcounted page pool,
+chunked prefill, prefix sharing + copy-on-write).
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
@@ -10,7 +11,7 @@ import numpy as np
 
 from repro.configs import get
 from repro.models import get_model
-from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
 
 
 def main():
@@ -38,33 +39,39 @@ def main():
           f"({stats['tokens_per_s']:.1f} tok/s), "
           f"x{stats['fused_speedup']:.1f} vs per-token loop")
 
-    # continuous batching: 8 requests over 4 slots, joins mid-flight
-    from repro.serve.engine import ContinuousBatchingEngine
-    cbe = ContinuousBatchingEngine(
-        model, params, ServeConfig(max_batch=4, max_seq=256,
-                                   max_new_tokens=8))
-    rids = [cbe.submit(rng.randint(0, cfg.vocab_size, size=6)
-                       .astype(np.int32)) for _ in range(8)]
-    results = cbe.run()
-    print(f"[serve_demo] continuous: {len(results)} requests / "
-          f"{cbe.joins} joins on 4 slots, "
-          f"{sum(len(results[r]) for r in rids)} tokens in "
-          f"{cbe.steps_run} lockstep steps")
-
-    # paged non-lockstep: same workload, per-slot positions + page pool,
-    # prompts chunk-prefilled through the fused decode cell
-    from repro.serve.engine import PagedEngine
+    # paged continuous batching: 8 requests over 4 slots, mid-flight joins,
+    # prompts chunk-prefilled through the one fused decode cell
     pe = PagedEngine(model, params,
                      ServeConfig(max_batch=4, max_seq=64, max_new_tokens=8,
                                  page_size=16, prefill_chunk=4))
     rids = [pe.submit(rng.randint(0, cfg.vocab_size, size=6)
                       .astype(np.int32)) for _ in range(8)]
     results = pe.run()
+    util = pe.util_trace
     print(f"[serve_demo] paged: {len(results)} requests / {pe.joins} joins "
           f"on 4 slots, {sum(len(results[r]) for r in rids)} tokens in "
           f"{pe.steps_run} chunked ticks, page util "
-          f"mean={pe.util_sum / max(1, pe.steps_run):.2f} "
-          f"max={pe.util_max:.2f}")
+          f"mean={np.mean(util):.2f} max={np.max(util):.2f}")
+
+    # prefix sharing: a common system prompt across 8 requests — later
+    # admissions reference the resident prefix pages instead of recomputing
+    # them; the first append into a shared page copies it (copy-on-write)
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=4, max_seq=64, max_new_tokens=6,
+                                 page_size=8, prefill_chunk=4))
+    sys_prompt = rng.randint(0, cfg.vocab_size, size=18).astype(np.int32)
+    # ragged tails AND budgets stagger the finishes: sharing matches LIVE
+    # slots, so a later admission needs a donor still mid-flight (equal
+    # lengths would finish whole waves in the same chunk-quantized tick)
+    rids = [pe.submit(np.concatenate(
+        [sys_prompt, rng.randint(0, cfg.vocab_size, size=rng.randint(2, 9))
+         .astype(np.int32)]), max_new_tokens=int(rng.randint(3, 10)))
+        for _ in range(8)]
+    results = pe.run()
+    print(f"[serve_demo] shared-prefix: {len(results)} requests, "
+          f"{pe.shared_tokens} prompt tokens served by page reference, "
+          f"{pe.kv.cow_copies} COW page copies, logical/physical tokens "
+          f"x{pe.logical_physical_ratio:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,87 @@
+#!/usr/bin/env bash
+# Tier-1 verify gate: pytest suite + CPU smoke serve benchmark + tokens/s
+# regression check against the COMMITTED BENCH_serve.json.
+#
+#   scripts/verify.sh            # full gate
+#   TOL=0.5 scripts/verify.sh    # custom regression tolerance (default 0.4:
+#                                # CPU smoke timings swing under container
+#                                # contention; the gate catches collapses,
+#                                # the recorded trajectory catches drift)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TOL="${TOL:-0.4}"
+
+echo "[verify] tier-1 pytest"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "[verify] committed BENCH_serve.json baseline"
+git show HEAD:BENCH_serve.json > /tmp/bench_baseline.json
+
+echo "[verify] CPU smoke serve_bench (all scenarios)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/serve_bench.py --json --scenario all
+
+echo "[verify] tokens/s regression check (tolerance ${TOL})"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - "$TOL" <<'EOF'
+import json
+import sys
+
+tol = float(sys.argv[1])
+with open("/tmp/bench_baseline.json") as f:
+    base = json.load(f)
+with open("BENCH_serve.json") as f:
+    new = json.load(f)
+
+
+def get(rec, dotted):
+    cur = rec
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+# throughputs must not collapse below (1 - tol) x committed; ratios and
+# speedups are schedule-determined and get the same gate
+GATED = [
+    "tokens_per_s_fused",
+    "continuous_tokens_per_s",
+    "ragged.ragged_tokens_per_s_paged",
+    "ragged.ragged_paged_speedup",
+    "shared_prefix.shared_tokens_per_s",
+    "shared_prefix.shared_logical_physical_ratio",
+]
+failed = []
+for key in GATED:
+    b, n = get(base, key), get(new, key)
+    if b is None or n is None:
+        print(f"  [skip] {key}: missing ({'baseline' if b is None else 'new'})")
+        continue
+    floor = (1.0 - tol) * b
+    status = "ok" if n >= floor else "REGRESSION"
+    print(f"  [{status}] {key}: {n:.2f} vs committed {b:.2f} "
+          f"(floor {floor:.2f})")
+    if n < floor:
+        failed.append(key)
+
+# hard floors independent of the committed record (acceptance criteria)
+ratio = get(new, "shared_prefix.shared_logical_physical_ratio")
+if ratio is not None and ratio < 1.5:
+    print(f"  [REGRESSION] shared-prefix logical/physical ratio {ratio:.2f} "
+          f"< 1.5")
+    failed.append("shared_prefix_ratio_floor")
+spd = get(new, "shared_prefix.shared_speedup")
+if spd is not None and spd <= 1.0:
+    print(f"  [REGRESSION] shared-prefix speedup {spd:.2f} <= 1.0 "
+          f"(sharing must beat unshared at equal pool)")
+    failed.append("shared_prefix_speedup_floor")
+
+if failed:
+    print(f"[verify] FAILED: {failed}")
+    sys.exit(1)
+print("[verify] OK")
+EOF
+
+echo "[verify] all gates passed"

@@ -561,6 +561,102 @@ def _fusion_write_bytes(fcomp: Computation) -> float:
     return total
 
 
+def _is_convert_like(inst: Instruction, comps: Dict[str, Computation]) -> bool:
+    """A ``convert``, or a ``call`` whose callee is nothing but one root
+    convert of its parameter (the CPU backend's sharded "parallel_convert"
+    wrapper around large buffers)."""
+    if inst.opcode == "convert":
+        return True
+    if inst.opcode == "call":
+        m = _TO_APPLY_RE.search(inst.attrs)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is not None:
+            body = [i for i in callee.order if i.opcode != "parameter"]
+            return len(body) == 1 and body[0].opcode == "convert"
+    return False
+
+
+def _dtype_bracket_elisions(comp: Computation,
+                            comps: Dict[str, Computation]) -> set:
+    """Names of standalone ``convert`` pairs (or single-convert ``call``
+    wrappers) that only BRACKET a donated in-place update in a wider
+    compute dtype: an upcast straight off a parameter / loop state matched
+    with a downcast of the SAME shape back to the SAME dtype feeding the
+    root.  Backends without native narrow-dtype scatter (CPU) materialize
+    these as whole-buffer converts around the update — e.g. the paged-KV
+    COW page copy on a bf16 pool compiles to
+    ``convert(pool) -> scatter -> convert`` and the brackets alone would
+    charge 3x the POOL per copy, erasing the page-wise accounting the
+    paged cache exists to create.  XLA:TPU updates the storage dtype in
+    place (or fuses the converts), so the census elides matched bracket
+    pairs; a genuine one-way cast (weight upcast, output quantization) has
+    no same-shape partner and is still counted."""
+    root = comp.root
+    root_feeds = set()
+    if root is not None:
+        root_feeds.add(root.name)
+        if root.opcode == "tuple":
+            root_feeds.update(root.operands)
+    ups: List[Instruction] = []
+    # (src_shape, res_shape, name-to-elide or None): the downcast may be a
+    # standalone convert (elide it too) or live INSIDE a root-feeding
+    # fusion as its interior root (the fusion stays counted — only the
+    # orphaned standalone upcast is the artifact then)
+    downs: List[Tuple[Shape, Shape, Optional[str]]] = []
+    for inst in comp.order:
+        if not inst.operands or not inst.shapes:
+            continue
+        if _is_convert_like(inst, comps):
+            src = comp.instructions.get(inst.operands[0])
+            if src is None or not src.shapes:
+                continue
+            if src.opcode in ("parameter", "get-tuple-element"):
+                ups.append(inst)
+            if inst.name in root_feeds:
+                downs.append((src.shapes[0], inst.shapes[0], inst.name))
+        elif inst.opcode in ("fusion", "call") and inst.name in root_feeds:
+            # follow nested fusion/call roots to a final interior convert
+            # (the CPU backend nests its sharded wrapper around the update
+            # fusion): the fusion stays counted — only the orphaned
+            # standalone upcast is the artifact
+            cur = inst
+            for _ in range(3):
+                cm = (_CALLS_RE.search(cur.attrs) if cur.opcode == "fusion"
+                      else _TO_APPLY_RE.search(cur.attrs)
+                      if cur.opcode == "call" else None)
+                fcomp = comps.get(cm.group(1)) if cm else None
+                froot = fcomp.root if fcomp is not None else None
+                if froot is None:
+                    break
+                if froot.opcode == "convert" and froot.operands \
+                        and froot.shapes:
+                    fsrc = fcomp.instructions.get(froot.operands[0])
+                    if fsrc is not None and fsrc.shapes:
+                        downs.append((fsrc.shapes[0], froot.shapes[0],
+                                      None))
+                    break
+                cur = froot
+    elide: set = set()
+    used_downs: set = set()
+    for u in ups:
+        u_src = comp.instructions[u.operands[0]].shapes[0]
+        u_res = u.shapes[0]
+        if DTYPE_BYTES.get(u_res.dtype, 0) <= DTYPE_BYTES.get(u_src.dtype, 0):
+            continue                                   # not an upcast
+        for di, (d_src, d_res, d_name) in enumerate(downs):
+            if di in used_downs or d_name == u.name:
+                continue
+            if (d_res.dtype == u_src.dtype and d_res.dims == u_src.dims
+                    and d_src.dtype == u_res.dtype
+                    and d_src.dims == u_res.dims):
+                elide.add(u.name)
+                if d_name is not None:
+                    elide.add(d_name)
+                used_downs.add(di)
+                break
+    return elide
+
+
 class ModuleCensus:
     """Walks the computation graph of a parsed module, scaling by while trip
     counts, producing a Census."""
@@ -587,7 +683,10 @@ class ModuleCensus:
         if comp is None:
             self._cache[key] = out
             return out
+        elide = _dtype_bracket_elisions(comp, self.comps)
         for inst in comp.order:
+            if inst.name in elide:
+                continue                   # backend dtype-bracket artifact
             self._one(inst, comp, out, count_bytes)
         self._cache[key] = out
         return out
@@ -726,11 +825,21 @@ class ModuleCensus:
         if cls == "layout":
             if op == "copy" and inst.operands:
                 # loop-carry pass-through copies (copy of a parameter /
-                # get-tuple-element of the loop state) are aliasing artifacts
-                # — XLA:TPU elides them via buffer donation
+                # get-tuple-element of the loop state) and ROOT copies that
+                # move a FUSION/CALL result into the donated output buffer
+                # are aliasing artifacts — XLA:TPU elides both via buffer
+                # donation (the producer writes the aliased buffer
+                # directly).  Shape equality cannot distinguish a genuine
+                # layout-converting root copy (Shape drops layouts), so
+                # the root case is gated on the producer opcode; a
+                # layout-change root copy of a fusion is still elided —
+                # acceptable for a TPU traffic model where the relayout
+                # folds into the producer.
                 src = comp.instructions.get(inst.operands[0])
-                if src is not None and src.opcode in ("parameter",
-                                                      "get-tuple-element"):
+                if src is not None and (
+                        src.opcode in ("parameter", "get-tuple-element")
+                        or (inst.is_root
+                            and src.opcode in ("fusion", "call"))):
                     out.opcode_counts[op] -= 1
                     out.class_counts[cls] -= 1
                     return

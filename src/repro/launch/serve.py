@@ -1,9 +1,11 @@
-"""Serving launcher: production mesh + batched engine.
+"""Serving launcher: production mesh + the paged continuous-batching engine.
 
 On this container run --local-smoke (reduced config, real engine).  The
-decode hot path is the fused device-resident ``decode_many`` loop
-(--legacy-loop falls back to the per-token host loop for comparison);
---continuous exercises the slot-scheduled continuous-batching engine.
+production path is the ``PagedEngine`` (refcounted page pool with prefix
+sharing + copy-on-write, tick scheduler with partial grants, chunked
+prefill through the one fused decode cell); --whole-batch falls back to
+lockstep whole-batch generation (``ServingEngine``), --legacy-loop to the
+per-token host loop, both kept for measured comparison.
 """
 import argparse
 import sys
@@ -18,63 +20,73 @@ def main() -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--whole-batch", action="store_true",
+                    help="lockstep whole-batch generation instead of the "
+                         "paged continuous-batching engine")
     ap.add_argument("--legacy-loop", action="store_true",
-                    help="per-token host loop instead of fused decode_many")
-    ap.add_argument("--continuous", action="store_true",
-                    help="slot-scheduled continuous batching demo "
-                         "(submits 2x batch requests over batch slots)")
-    ap.add_argument("--paged", action="store_true",
-                    help="with --continuous: the non-lockstep paged engine "
-                         "(per-slot positions, page free list, chunked "
-                         "prefill through the fused decode cell)")
+                    help="with --whole-batch: per-token host loop instead "
+                         "of fused decode_many")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable prompt-prefix page sharing on admission")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=4)
     args = ap.parse_args()
+    if args.legacy_loop and not args.whole_batch:
+        ap.error("--legacy-loop only applies to --whole-batch generation "
+                 "(the paged engine always runs the fused decode cell)")
 
     import jax
     from repro import configs
     from repro.models import get_model
-    from repro.serve.engine import (
-        ContinuousBatchingEngine, PagedEngine, ServeConfig, ServingEngine)
+    from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
 
     cfg = configs.get(args.arch)
     if args.local_smoke:
         cfg = cfg.reduced()
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
-    # continuous mode runs 2x batch requests through batch slots in
-    # lockstep: two admission waves of (prompt<=16 + new_tokens) shared
-    # cache positions each — size max_seq for the requested workload
-    # instead of crashing on cache exhaustion for large --new-tokens
-    max_seq = max(128, 2 * (16 + args.new_tokens) + 16)
+    # 2x batch requests of (prompt<=16 + new_tokens) tokens each; the paged
+    # engine recycles pages across requests so max_seq only bounds ONE
+    # request's span, not the engine's lifetime
+    max_seq = max(64, 16 + args.new_tokens + 16)
     scfg = ServeConfig(max_batch=args.batch, max_seq=max_seq,
                        max_new_tokens=args.new_tokens,
                        temperature=args.temperature,
-                       fused=not args.legacy_loop)
+                       fused=not args.legacy_loop,
+                       page_size=args.page_size,
+                       prefill_chunk=args.prefill_chunk,
+                       prefix_sharing=not args.no_prefix_sharing)
     rng = np.random.RandomState(0)
 
-    if args.continuous:
-        cls = PagedEngine if args.paged else ContinuousBatchingEngine
-        engine = cls(model, params, scfg)
-        rids = [engine.submit(
-            rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)
-                        ).astype(np.int32)) for _ in range(2 * args.batch)]
-        results = engine.run()
-        extra = (f", page util mean="
-                 f"{engine.util_sum / max(1, engine.steps_run):.2f} "
-                 f"max={engine.util_max:.2f}" if args.paged else "")
-        print(f"[launch.serve] continuous[{'paged' if args.paged else 'dense'}"
-              f"]: {len(results)} requests, "
-              f"{sum(len(results[r]) for r in rids)} tokens, "
-              f"{engine.joins} joins over {args.batch} slots in "
-              f"{engine.steps_run} steps{extra}")
+    if args.whole_batch:
+        engine = ServingEngine(model, params, scfg)
+        prompts = [rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)
+                               ).astype(np.int32) for _ in range(args.batch)]
+        outs = engine.generate_batch(prompts)
+        mode = ("legacy per-token loop" if args.legacy_loop
+                else "fused decode_many")
+        print(f"[launch.serve] generated {sum(len(o) for o in outs)} tokens "
+              f"across {len(outs)} requests ({mode})")
         return 0
 
-    engine = ServingEngine(model, params, scfg)
-    prompts = [rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)
-                           ).astype(np.int32) for _ in range(args.batch)]
-    outs = engine.generate_batch(prompts)
-    mode = "legacy per-token loop" if args.legacy_loop else "fused decode_many"
-    print(f"[launch.serve] generated {sum(len(o) for o in outs)} tokens "
-          f"across {len(outs)} requests ({mode})")
+    engine = PagedEngine(model, params, scfg)
+    # shared system prompt + per-request tail: the prefix-sharing showcase
+    sys_prompt = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+    rids = [engine.submit(np.concatenate(
+        [sys_prompt,
+         rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)
+                     ).astype(np.int32)])) for _ in range(2 * args.batch)]
+    results = engine.run()
+    util = engine.util_trace
+    print(f"[launch.serve] paged: {len(results)} requests, "
+          f"{sum(len(results[r]) for r in rids)} tokens, "
+          f"{engine.joins} joins over {args.batch} slots in "
+          f"{engine.steps_run} ticks; "
+          f"shared {engine.shared_tokens} prefix tokens "
+          f"(logical/physical x{engine.logical_physical_ratio:.2f}, "
+          f"{engine.kv.cow_copies} COW copies), page util "
+          f"mean={np.mean(util) if util else 0:.2f} "
+          f"max={np.max(util) if util else 0:.2f}")
     return 0
 
 

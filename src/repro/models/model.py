@@ -187,8 +187,13 @@ class Model:
         serving path is one module family ``core.hlo_counters`` can census.
 
         tokens (B, 1) int32 — each slot's last emitted token.
-        active (B,) bool — inactive slots write only the null page and do
-        not advance their length.
+        active — (num_steps, B) bool PER-STEP mask (a (B,) mask is
+        broadcast to every step): the tick scheduler packs partial chunks
+        by activating a slot for only its granted prefix of the tick's
+        steps.  An inactive slot writes only the null page, does not
+        advance its length, and its token stream is FROZEN (the carry
+        re-emits its last token) so the host reads a stable value at the
+        slot's final active step regardless of later steps.
         forced_tok / forced_mask (num_steps, B) — where the mask is set the
         emitted token is OVERRIDDEN by forced_tok (prompt feeding: chunked
         prefill routes prompt tokens through the decode cell); None means
@@ -202,18 +207,21 @@ class Model:
         if forced_tok is None:
             forced_tok = jnp.zeros((num_steps, B), jnp.int32)
             forced_mask = jnp.zeros((num_steps, B), bool)
+        active = jnp.asarray(active)
+        if active.ndim == 1:
+            active = jnp.broadcast_to(active[None], (num_steps, B))
 
         def step(carry, xs):
             tok, cache, key = carry
-            f_tok, f_mask = xs
-            logits, cache = self.decode_step_paged(params, tok, cache,
-                                                   active)
+            f_tok, f_mask, act = xs
+            logits, cache = self.decode_step_paged(params, tok, cache, act)
             nxt, key = sample_token(logits, key, temperature)
             nxt = jnp.where(f_mask, f_tok, nxt)
+            nxt = jnp.where(act, nxt, tok[:, 0])
             return (nxt[:, None], cache, key), nxt
 
         (_, cache, key), toks = jax.lax.scan(
-            step, (tokens, cache, key), (forced_tok, forced_mask),
+            step, (tokens, cache, key), (forced_tok, forced_mask, active),
             length=num_steps)
         return toks, cache, key
 

@@ -265,7 +265,17 @@ def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     Appends this step's K/V at each slot's OWN position (page
     ``table[b, lengths[b] // page]``, row ``lengths[b] % page``) and attends
     positions [0, lengths[b]] — no shared cache position, no start-window
-    masking: a slot's window is exactly the pages it owns."""
+    masking: a slot's window is exactly the pages its table references.
+
+    COW-aware append invariant: with prefix sharing a physical page may be
+    referenced by SEVERAL block tables.  The append path assumes the page
+    at the slot's write position is exclusively owned — the host scheduler
+    copy-on-write privatizes any shared page before granting the steps
+    that would write it, so a write through one table can never reach rows
+    another table still exposes.  Reads need no such care: rope positions
+    are request-relative, so the K/V rows of an identical token prefix are
+    bit-identical whichever slot computed them, and rows past a sharer's
+    ``length`` in a shared trailing page are masked by its own kv_len."""
     hn = apply_norm(h, p["ln1"], cfg)
     a = p["attn"]
     q, k, v = _qkv(hn, a, cfg, rope, decode=True)
@@ -430,15 +440,12 @@ def lm_forward(params, cfg: ArchConfig, inputs, positions,
 def lm_decode(params, cfg: ArchConfig, tokens, cache):
     """tokens (B, 1); cache per family (see init_cache).
 
-    ``pos`` is the cache ROW the new token is written to; ``pos_base`` is
-    added on top for the rope position stream, so row wraparound in the
-    lockstep continuous-batching engine can rebase rows without breaking
-    rope relative distances (keys already in the cache were rotated with
-    the unrebased absolute positions)."""
+    ``pos`` is both the cache ROW the new token is written to and its rope
+    position (whole-batch generation never rebases rows; the paged path
+    has per-slot positions instead)."""
     B = tokens.shape[0] if cfg.embed_inputs else tokens.shape[0]
     pos = cache["pos"]
-    rope_pos = pos + cache.get("pos_base", jnp.int32(0))
-    positions = jnp.full((B, 1), rope_pos, jnp.int32)
+    positions = jnp.full((B, 1), pos, jnp.int32)
     if cfg.mrope_sections:
         positions = jnp.broadcast_to(positions, (3, B, 1))
     rope = _rope(cfg, positions)
@@ -750,14 +757,10 @@ def cache_decls(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
     bf = cfg.param_dtype
     decls: Dict[str, Any] = {
         "pos": ParamDecl((), (), "zeros", jnp.int32),
-        # rope-position rebase: the continuous-batching engine's row
-        # wraparound slides cache ROWS down but absolute rope positions must
-        # keep advancing (keys already written were rotated with the old
-        # absolute positions) — decode rotates at pos + pos_base.
-        "pos_base": ParamDecl((), (), "zeros", jnp.int32),
         # per-slot attention-window base: slot b attends cache positions
-        # [start[b], pos].  0 for whole-batch generation; the continuous-
-        # batching engine bumps it when a slot is re-issued mid-flight.
+        # [start[b], pos].  0 for whole-batch generation; the decode
+        # kernels keep the windowed path (serving uses the paged cache's
+        # per-slot block tables instead).
         "start": ParamDecl((batch,), ("batch",), "zeros", jnp.int32)}
     if cfg.family == "ssm":
         decls["conv"] = ParamDecl((cfg.n_layers, batch, K - 1, d_in),
@@ -795,7 +798,10 @@ def paged_cache_decls(cfg: ArchConfig, batch: int, max_blocks: int,
     layer plus a per-slot block table and per-slot lengths — NO shared
     position, NO start window.  Page 0 is the reserved null page (never
     allocated; inactive slots' appends and unallocated table entries land
-    there).  The pool is sharded over its page axis ('cache_seq'), the
+    there).  Several block tables may reference the SAME physical page
+    (prefix sharing; see serve/cache.py for the refcount/COW discipline —
+    the device arrays carry no refcounts, only the host manager does).
+    The pool is sharded over its page axis ('cache_seq'), the
     flash-decoding seq-sharding of the dense cache carried over page-wise."""
     if cfg.mamba_version or cfg.is_encoder_decoder:
         raise ValueError("paged KV cache requires a decoder-only attention "

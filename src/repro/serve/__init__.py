@@ -1,3 +1,4 @@
+from repro.serve.cache import PagedKVCache  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
-    ContinuousBatchingEngine, PagedEngine, PagedKVCache, ServeConfig,
-    ServingEngine)
+    PagedEngine, Request, ServeConfig, ServingEngine)
+from repro.serve.scheduler import TickPlan, TickScheduler  # noqa: F401

@@ -1,0 +1,251 @@
+"""Paged KV cache manager: a refcounted page pool with prefix sharing and
+copy-on-write.
+
+Device state (``Model.init_paged_cache``): k/v page pools
+(L, num_pages, page, KV, hd), a block table (B, max_blocks) int32 and
+per-slot lengths (B,) int32.  The manager owns the host mirrors, the page
+FREE LIST and the per-page REFCOUNTS; page 0 is the reserved NULL page —
+never allocated, the landing zone for inactive slots' appends and
+unallocated table entries (so the Pallas kernel's scalar-prefetched DMA
+address is always valid).
+
+Prefix sharing maps ONE physical page into SEVERAL block tables
+(``share()``): a request admitted with a prompt prefix already resident in
+a live slot's pages references those pages instead of recomputing them —
+rope positions are request-relative in the paged decode path, so the K/V
+rows for an identical token prefix are bit-identical across slots and the
+reference is exact, not approximate.  Pages referenced more than once are
+IMMUTABLE: before any slot may append into a page with refcount > 1 the
+engine calls ``cow()``, which copies the page to a freshly-allocated one
+(a donated device page copy whose bytes the HLO census accounts page-wise,
+standalone and in-fusion) and rewires only that slot's table entry.
+Eviction decrements refcounts; a page returns to the free list only when
+its refcount reaches zero, so evicting a sharer never frees a page another
+slot still references.
+
+Invariants (``check()``, fuzz-asserted by the property harness): every
+page's refcount equals the number of block-table references to it; the
+null page plus every referenced page plus the free list cover
+[0, num_pages) exactly — no page is ever double-allocated, leaked, or
+freed while referenced.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def _copy_pages(pool, dst, src):
+    """Device page copy on the stacked (L, num_pages, page, KV, hd) pool:
+    rows of pages ``src`` are written into pages ``dst`` (both (n,) int32).
+    Jitted with a donated pool so the copy is in place — the HLO is a
+    page-sized gather + scatter whose census bytes scale with the pages
+    copied, never with the pool."""
+    return pool.at[:, dst].set(pool[:, src])
+
+
+def _copy_pages_both(k, v, dst, src):
+    """COW copies k AND v in one dispatch (both pools donated)."""
+    return _copy_pages(k, dst, src), _copy_pages(v, dst, src)
+
+
+class PagedKVCache:
+    """Host-side manager for the paged decode cache (see module docstring)."""
+
+    def __init__(self, model: Model, max_batch: int, max_seq: int, *,
+                 page_size: int = 16, max_blocks: int = 0,
+                 num_pages: int = 0):
+        self.page = page_size
+        self.max_blocks = max_blocks or -(-max_seq // page_size)
+        # default pool: every slot can hold its full table + the null page
+        self.num_pages = num_pages or (max_batch * self.max_blocks + 1)
+        self.B = max_batch
+        arrays = model.init_paged_cache(max_batch, self.max_blocks,
+                                        self.page, self.num_pages)
+        self.k = arrays["k"]
+        self.v = arrays["v"]
+        self.table = np.zeros((max_batch, self.max_blocks), np.int32)
+        self.length = np.zeros((max_batch,), np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(max_batch)]
+        self.refcount = np.zeros((self.num_pages,), np.int32)
+        self.free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._gather = jax.jit(lambda pool, perm: pool[:, perm],
+                               donate_argnums=(0,))
+        self._copy = jax.jit(_copy_pages_both, donate_argnums=(0, 1))
+        # per-page bytes across BOTH pools (the census-checked COW cost)
+        L = self.k.shape[0]
+        self.page_bytes = 2 * L * self.page * self.k.shape[3] \
+            * self.k.shape[4] * self.k.dtype.itemsize
+        self.cow_copies = 0
+        self.cow_bytes = 0
+        self.shared_pages = 0            # share() page references handed out
+
+    # -- allocation ----------------------------------------------------------
+
+    def ensure(self, i: int, n_tokens: int) -> bool:
+        """Allocate pages so slot ``i`` can hold ``n_tokens`` tokens.
+        Returns False (allocating nothing further) if the free list runs
+        dry — the scheduler then grants the slot fewer steps (or stalls it)
+        until eviction frees pages."""
+        need = -(-n_tokens // self.page)
+        if need > self.max_blocks:
+            raise RuntimeError(
+                f"slot {i} needs {need} blocks > max_blocks="
+                f"{self.max_blocks} (request exceeds max_seq)")
+        while len(self.owned[i]) < need:
+            if not self.free:
+                return False
+            pg = self.free.pop()
+            self.refcount[pg] = 1
+            self.table[i, len(self.owned[i])] = pg
+            self.owned[i].append(pg)
+        return True
+
+    def share(self, dst: int, donor: int, n_tokens: int) -> None:
+        """Map the donor's pages covering token positions [0, n_tokens)
+        into slot ``dst``'s block table (refcount bump, no allocation, no
+        copy) and set its length.  ``dst`` must be empty.  The trailing
+        page may be partially filled — ``dst`` reads only rows below its
+        own length there, and its first append into it triggers ``cow()``.
+        """
+        assert not self.owned[dst], "share() target slot must be empty"
+        need = -(-n_tokens // self.page)
+        pages = self.owned[donor][:need]
+        assert len(pages) == need, "donor does not cover the shared prefix"
+        for j, pg in enumerate(pages):
+            self.table[dst, j] = pg
+            self.refcount[pg] += 1
+        self.owned[dst] = list(pages)
+        self.length[dst] = n_tokens
+        self.shared_pages += need
+
+    def cow(self, i: int, blk: int) -> bool:
+        """Copy-on-write block ``blk`` of slot ``i``: if the page is shared
+        (refcount > 1), copy it to a fresh page (donated device page copy)
+        and rewire only this slot's table entry, leaving the original —
+        and every row another slot can see — untouched.  Returns False if
+        the free list is dry (the scheduler stalls the slot until eviction
+        frees a page).  No-op on exclusively-owned pages."""
+        pg = self.owned[i][blk]
+        if self.refcount[pg] <= 1:
+            return True
+        if not self.free:
+            return False
+        q = self.free.pop()
+        dst = jnp.asarray([q], jnp.int32)
+        src = jnp.asarray([pg], jnp.int32)
+        self.k, self.v = self._copy(self.k, self.v, dst, src)
+        self.refcount[pg] -= 1
+        self.refcount[q] = 1
+        self.owned[i][blk] = q
+        self.table[i, blk] = q
+        self.cow_copies += 1
+        self.cow_bytes += self.page_bytes
+        return True
+
+    def shared_blocks(self, i: int, lo_tok: int, hi_tok: int) -> List[int]:
+        """Block indices of slot ``i`` whose pages are shared (refcount > 1)
+        among the blocks that appends to token positions [lo_tok, hi_tok)
+        would touch — the set ``cow()`` must privatize before the tick."""
+        b0 = lo_tok // self.page
+        b1 = (hi_tok - 1) // self.page
+        return [b for b in range(b0, min(b1, len(self.owned[i]) - 1) + 1)
+                if self.refcount[self.owned[i][b]] > 1]
+
+    def free_slot(self, i: int) -> None:
+        """Eviction: drop slot ``i``'s references; pages whose refcount
+        reaches zero go back to the free list (a page another slot still
+        references stays live)."""
+        for pg in reversed(self.owned[i]):
+            self.refcount[pg] -= 1
+            if self.refcount[pg] == 0:
+                self.free.append(pg)
+        self.owned[i] = []
+        self.table[i, :] = 0
+        self.length[i] = 0
+
+    # -- bookkeeping ----------------------------------------------------------
+
+    @property
+    def live_pages(self) -> int:
+        """Distinct physical pages referenced by at least one slot."""
+        return len({p for o in self.owned for p in o})
+
+    @property
+    def logical_pages(self) -> int:
+        """Block-table references summed over slots (>= live_pages when
+        prefix sharing maps one page into several tables)."""
+        return sum(len(o) for o in self.owned)
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pages currently referenced by live
+        slots (physical: shared pages count once)."""
+        return self.live_pages / max(1, self.num_pages - 1)
+
+    def occupancy(self) -> float:
+        """Fraction of rows in live pages holding real tokens — intra-page
+        fragmentation, invariant under defrag (which only renumbers)."""
+        rows = self.live_pages * self.page
+        # shared rows are stored once but the physical rows written are
+        # exactly the DISTINCT tokens: count each live page's filled rows
+        # under its furthest-advanced referent
+        fill = {}
+        for i in range(self.B):
+            n = int(self.length[i])
+            for j, pg in enumerate(self.owned[i]):
+                f = min(self.page, max(0, n - j * self.page))
+                fill[pg] = max(fill.get(pg, 0), f)
+        return sum(fill.values()) / rows if rows else 0.0
+
+    def check(self) -> None:
+        """Refcount/free-list/table invariants (cheap; the property harness
+        calls this every fuzz step)."""
+        refs = Counter(p for o in self.owned for p in o)
+        assert 0 not in refs, "null page referenced"
+        for i, o in enumerate(self.owned):
+            assert len(set(o)) == len(o), f"slot {i} references a page twice"
+            assert list(self.table[i, :len(o)]) == o, "table/owned drift"
+            assert not self.table[i, len(o):].any(), "stale table entry"
+        for p in range(1, self.num_pages):
+            assert self.refcount[p] == refs.get(p, 0), \
+                f"page {p}: refcount {self.refcount[p]} != " \
+                f"{refs.get(p, 0)} table references"
+        assert len(set(self.free)) == len(self.free), "free-list duplicate"
+        assert not set(refs) & set(self.free), "page both referenced and free"
+        assert set(refs) | set(self.free) == set(range(1, self.num_pages)), \
+            "page leaked"
+
+    # -- defrag ----------------------------------------------------------------
+
+    def defrag(self) -> None:
+        """Compact live pages to the contiguous pool prefix [1, live+1)
+        (one donated device gather per pool) and rewrite the block tables.
+        A page shared by several tables moves ONCE and every table entry is
+        renumbered to the same new id.  Purely physical: logical contents
+        are untouched, so engine output is bit-identical across defrags
+        (property-tested)."""
+        mapping = {0: 0}
+        perm = [0]                                    # new -> old; null stays
+        for i in range(self.B):
+            for j, pg in enumerate(self.owned[i]):
+                if pg not in mapping:
+                    mapping[pg] = len(perm)
+                    perm.append(pg)
+                self.table[i, j] = mapping[pg]
+            self.owned[i] = [mapping[pg] for pg in self.owned[i]]
+        live = len(perm) - 1
+        perm.extend(p for p in range(1, self.num_pages) if p not in mapping)
+        new_rc = np.zeros_like(self.refcount)
+        for old, new in mapping.items():
+            new_rc[new] = self.refcount[old]
+        self.refcount = new_rc
+        self.free = list(range(self.num_pages - 1, live, -1))
+        perm_dev = jnp.asarray(np.asarray(perm, np.int32))
+        self.k = self._gather(self.k, perm_dev)
+        self.v = self._gather(self.v, perm_dev)

@@ -1,5 +1,5 @@
-"""Batched serving engines: fused device-resident decode, lockstep
-continuous batching, and the paged non-lockstep engine.
+"""Serving engines: fused device-resident decode and the paged
+continuous-batching production path.
 
 The decode hot path is ONE compiled HLO module (``Model.decode_many`` /
 ``Model.decode_many_paged``: a ``lax.scan`` over decode steps with on-device
@@ -10,29 +10,27 @@ instruction roofline — and removes the per-token host round-trip the legacy
 loop pays (kept as ``fused=False`` for the measured comparison in
 ``benchmark_decode`` / benchmarks/serve_bench.py).
 
-Three engines, one compiled-cell discipline (no recompiles, ever):
+Two engines, one compiled-cell discipline (no recompiles, ever):
 
   * ``ServingEngine`` — whole-batch generation: prefill once, decode all
-    sequences in lockstep.
-  * ``ContinuousBatchingEngine`` — slot scheduling over a LOCKSTEP dense
-    cache (one shared position): finished sequences release their slot,
-    queued requests join mid-flight through the same compiled decode step
-    (prefill-by-decode) behind a per-slot ``start`` window.  When the
-    shared position would exhaust ``max_seq`` the cache rows WRAP: live
-    windows slide down by the smallest active ``start`` (finished slots'
-    burned rows are reclaimed) while ``pos_base`` keeps the rope position
-    stream absolute — a slot never reads rows below its ``start``, before
-    or after wraparound (regression-tested).
-  * ``PagedEngine`` — the NON-LOCKSTEP engine over a ``PagedKVCache``:
-    a shared page pool + per-slot block tables + per-slot lengths.  Every
-    slot decodes at its own position on its own pages (rope is
-    request-relative by construction), admission allocates pages from a
-    free list, finished slots' pages are evicted back to it, and
-    ``defrag()`` compacts live pages to the pool prefix.  Each engine tick
-    runs ``prefill_chunk`` fused steps of ``decode_many_paged``; prompts
-    are CHUNK-PREFILLED through that same cell (forced-token override), so
-    prefill + decode are one censusable module family and the decode
-    kernel's transaction count scales with live tokens, not ``max_seq``.
+    sequences in lockstep.  Also the token-identity ORACLE the paged
+    property harness fuzzes against.
+  * ``PagedEngine`` — THE production path: non-lockstep continuous
+    batching over a ``PagedKVCache`` (serve/cache.py: refcounted page pool
+    + per-slot block tables + per-slot lengths) driven by a
+    ``TickScheduler`` (serve/scheduler.py: partial grants, fairness,
+    per-tick budget).  Every slot decodes at its own position on its own
+    pages (rope is request-relative by construction), prompts are
+    CHUNK-PREFILLED through the same compiled cell (forced-token
+    override), and a request admitted with a prompt prefix already
+    resident in a live slot's pages SHARES those pages (refcount bump, no
+    recompute) — appends into a shared page copy-on-write privatize it
+    first.  A request can outlive ``max_seq`` total traffic (pages
+    recycle), mid-flight joins reuse the one compiled cell, and the decode
+    kernel's transaction count scales with live tokens, not pool size —
+    the engine's regression suite pins all three guarantees, migrated from
+    the retired dense lockstep engine (its row-wraparound machinery is
+    gone; per-slot pages make it unnecessary).
 
 CPU-runnable end-to-end (examples/serve_demo.py); the same step functions are
 what launch/serve.py lowers for the production mesh.
@@ -41,13 +39,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model, sample_token
+from repro.serve.cache import PagedKVCache
+from repro.serve.scheduler import TickScheduler
 
 
 @dataclasses.dataclass
@@ -65,6 +65,11 @@ class ServeConfig:
     max_blocks: int = 0               # block-table width (0: ceil(max_seq/page))
     num_pages: int = 0                # pool size incl. null page (0: fit all slots)
     prefill_chunk: int = 4            # fused steps per PagedEngine tick
+    # --- prefix sharing / scheduling ---------------------------------------
+    prefix_sharing: bool = True       # share resident prompt prefixes on admit
+    share_min_tokens: int = 1         # smallest common prefix worth sharing
+    fairness: str = "least-served"    # page-grant order ("slot-order": legacy)
+    tick_budget: int = 0              # max fresh tokens per tick (0: uncapped)
 
 
 @dataclasses.dataclass
@@ -222,25 +227,29 @@ class ServingEngine:
 
 
 # ---------------------------------------------------------------------------
-# continuous batching
+# paged continuous batching
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class _Slot:
-    """One schedulable slot (both engines): ``forced`` holds the prompt
-    tokens still to be forced into the stream (prefill-by-decode)."""
+    """One schedulable slot: ``forced`` holds the prompt tokens still to be
+    forced into the stream (prefill-by-decode); ``history`` mirrors the
+    tokens whose K/V rows are resident in the slot's pages (the prefix-
+    sharing donor index — ``len(history) == kv.length[i]`` always);
+    ``served`` counts fresh tokens appended (the fairness key)."""
     rid: int = -1
     forced: List[int] = dataclasses.field(default_factory=list)
     out: List[int] = dataclasses.field(default_factory=list)
+    history: List[int] = dataclasses.field(default_factory=list)
     budget: int = 0
+    served: int = 0
     active: bool = False
 
 
 class _SlotQueueBase:
-    """Request lifecycle shared by the slot-scheduled engines (lockstep
-    dense and paged): submission queue, rid assignment, drain loop.
-    Subclasses provide ``step()`` and initialize ``cfg``, ``queue``,
-    ``slots``, ``results`` and ``_next_rid``."""
+    """Request lifecycle for slot-scheduled engines: submission queue, rid
+    assignment, drain loop.  Subclasses provide ``step()`` and initialize
+    ``cfg``, ``queue``, ``slots``, ``results`` and ``_next_rid``."""
 
     def submit(self, prompt: np.ndarray,
                max_new_tokens: Optional[int] = None) -> int:
@@ -265,287 +274,45 @@ class _SlotQueueBase:
         return self.results
 
 
-def _make_engine_step(model: Model):
-    """One decode step + sampling + forced-token override, as a pure
-    function of arrays (compiled exactly once per temperature)."""
-
-    def step(params, tok, cache, key, forced_tok, forced_mask,
-             temperature: float):
-        logits, cache = model.decode_step(params, tok[:, None], cache)
-        sampled, key = sample_token(logits, key, temperature)
-        nxt = jnp.where(forced_mask, forced_tok, sampled)
-        return nxt, cache, key
-
-    return step
-
-
-def _shift_cache(cache, n):
-    """Row wraparound for the lockstep dense cache: slide every live window
-    down ``n`` rows.  Rolled-off rows (all < every active slot's ``start``,
-    i.e. burned by finished occupants) wrap to the tail, where they stay
-    masked by ``kv_len`` until overwritten.  ``pos_base`` absorbs the shift
-    so the rope position stream stays absolute — the keys already in the
-    cache were rotated with the old positions and relative distances must
-    survive the rebase."""
-    out = dict(cache)
-    for name in ("k", "v"):
-        out[name] = jnp.roll(cache[name], -n, axis=2)    # (L, B, T, KV, hd)
-    out["start"] = jnp.maximum(cache["start"] - n, 0)
-    out["pos"] = cache["pos"] - n
-    out["pos_base"] = cache["pos_base"] + n
-    return out
-
-
-class ContinuousBatchingEngine(_SlotQueueBase):
-    """Slot-scheduled decoding over ONE compiled step — no recompiles, ever.
-
-    All ``max_batch`` slots advance in lockstep over a shared, donated,
-    slot-paged KV cache (one (max_seq, KV, hd) page per slot).  A queued
-    request joins the moment a slot frees:
-
-      * the slot's ``start`` is set to the current shared position, masking
-        the previous occupant's KV rows (per-slot attention window);
-      * its prompt is fed through the SAME compiled decode step one token
-        per engine step ("prefill-by-decode") — the sampled output is
-        overridden by the next prompt token until the prompt is exhausted,
-        after which sampled tokens are collected as output.
-
-    Decoder-only LMs only (whisper needs per-request cross-attention caches;
-    a joining SSM slot would inherit the previous occupant's state).
-    """
-
-    def __init__(self, model: Model, params, cfg: ServeConfig):
-        if model.cfg.is_encoder_decoder or model.cfg.mamba_version:
-            raise ValueError("continuous batching requires a decoder-only "
-                             "attention LM (per-slot KV windows)")
-        self.model = model
-        self.params = params
-        self.cfg = cfg
-        B = cfg.max_batch
-        self._step = jax.jit(_make_engine_step(model),
-                             static_argnames=("temperature",),
-                             donate_argnums=(2, 3))   # cache + key
-        self._shift = jax.jit(_shift_cache, donate_argnums=(0,))
-        self.cache = model.init_cache(B, cfg.max_seq)
-        self.key = jax.random.key(cfg.seed)
-        self.pos = 0                                  # host mirror of pos
-        self._start = np.zeros((B,), np.int32)        # host mirror of start
-        self.slots = [_Slot() for _ in range(B)]
-        self.queue: List[Request] = []
-        self.results: Dict[int, List[int]] = {}
-        self._feed = np.full((B,), cfg.pad_id, np.int32)
-        self._next_rid = 0
-        self.steps_run = 0
-        self.joins = 0
-        self.wraps = 0
-
-    # -- request lifecycle -----------------------------------------------------
-
-    def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot.active or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = [int(t) for t in req.prompt]
-            self.slots[i] = _Slot(rid=req.rid, forced=prompt[1:], out=[],
-                                  budget=req.max_new_tokens, active=True)
-            # window base: mask every cache row this slot wrote before
-            self.cache["start"] = self.cache["start"].at[i].set(self.pos)
-            self._start[i] = self.pos
-            self._feed[i] = prompt[0]
-            self.joins += 1
-
-    def _finish(self, i: int) -> None:
-        slot = self.slots[i]
-        self.results[slot.rid] = slot.out
-        self.slots[i] = _Slot()
-        self._feed[i] = self.cfg.pad_id
-
-    # -- stepping ---------------------------------------------------------------
-
-    def _wrap(self) -> None:
-        """Reclaim burned rows when the shared position hits ``max_seq``:
-        slide every live window down by the smallest active ``start`` (the
-        rows below it belong to FINISHED occupants only).  A slot admitted
-        at any engine step must never read rows below its ``start``, before
-        or after wraparound — the shift translates start/pos uniformly so
-        the per-slot window masks are preserved, and ``pos_base`` keeps
-        rope positions absolute (see ``_shift_cache``)."""
-        active = [i for i, s in enumerate(self.slots) if s.active]
-        shift = int(min(self._start[i] for i in active)) if active \
-            else self.pos
-        if shift <= 0:
-            raise RuntimeError(
-                f"KV cache exhausted at pos={self.pos} (max_seq="
-                f"{self.cfg.max_seq}): an active slot still spans row 0 — "
-                f"use PagedEngine for workloads outliving max_seq")
-        self.cache = self._shift(self.cache, jnp.int32(shift))
-        self._start = np.maximum(self._start - shift, 0).astype(np.int32)
-        self.pos -= shift
-        self.wraps += 1
-
-    def step(self) -> None:
-        """Admit waiting requests, advance every slot by one token."""
-        cfg = self.cfg
-        if self.pos + 1 >= cfg.max_seq:
-            self._wrap()
-        self._admit()
-        forced_tok = np.full((len(self.slots),), cfg.pad_id, np.int32)
-        forced_mask = np.zeros((len(self.slots),), bool)
-        for i, slot in enumerate(self.slots):
-            if slot.active and slot.forced:
-                forced_tok[i] = slot.forced.pop(0)
-                forced_mask[i] = True
-        nxt, self.cache, self.key = self._step(
-            self.params, jnp.asarray(self._feed), self.cache, self.key,
-            jnp.asarray(forced_tok), jnp.asarray(forced_mask),
-            temperature=cfg.temperature)
-        self.pos += 1
-        self.steps_run += 1
-        nxt_np = np.asarray(nxt)
-        for i, slot in enumerate(self.slots):
-            if not slot.active:
-                continue
-            if forced_mask[i]:                      # still catching up
-                self._feed[i] = nxt_np[i]
-                continue
-            tok = int(nxt_np[i])                    # sampled: real output
-            slot.out.append(tok)
-            if (cfg.eos_id >= 0 and tok == cfg.eos_id) \
-                    or len(slot.out) >= slot.budget:
-                self._finish(i)
-            else:
-                self._feed[i] = nxt_np[i]
-
-
-# ---------------------------------------------------------------------------
-# paged (non-lockstep) serving
-# ---------------------------------------------------------------------------
-
-class PagedKVCache:
-    """Host-side manager for the paged decode cache.
-
-    Device state (``Model.init_paged_cache``): k/v page pools
-    (L, num_pages, page, KV, hd), a block table (B, max_blocks) int32 and
-    per-slot lengths (B,) int32.  The manager owns the host mirrors and the
-    page FREE LIST; page 0 is the reserved NULL page — never allocated, the
-    landing zone for inactive slots' appends and unallocated table entries
-    (so the Pallas kernel's scalar-prefetched DMA address is always valid).
-
-    Invariants (``check()``, fuzz-asserted by the property harness): the
-    null page plus every slot's owned pages plus the free list partition
-    [0, num_pages) exactly — no page is ever double-allocated or leaked.
-    """
-
-    def __init__(self, model: Model, max_batch: int, max_seq: int, *,
-                 page_size: int = 16, max_blocks: int = 0,
-                 num_pages: int = 0):
-        self.page = page_size
-        self.max_blocks = max_blocks or -(-max_seq // page_size)
-        # default pool: every slot can hold its full table + the null page
-        self.num_pages = num_pages or (max_batch * self.max_blocks + 1)
-        self.B = max_batch
-        arrays = model.init_paged_cache(max_batch, self.max_blocks,
-                                        self.page, self.num_pages)
-        self.k = arrays["k"]
-        self.v = arrays["v"]
-        self.table = np.zeros((max_batch, self.max_blocks), np.int32)
-        self.length = np.zeros((max_batch,), np.int32)
-        self.owned: List[List[int]] = [[] for _ in range(max_batch)]
-        self.free: List[int] = list(range(self.num_pages - 1, 0, -1))
-        self._gather = jax.jit(lambda pool, perm: pool[:, perm],
-                               donate_argnums=(0,))
-
-    # -- allocation ----------------------------------------------------------
-
-    def ensure(self, i: int, n_tokens: int) -> bool:
-        """Allocate pages so slot ``i`` can hold ``n_tokens`` tokens.
-        Returns False (allocating nothing further) if the free list runs
-        dry — the engine stalls the slot until eviction frees pages."""
-        need = -(-n_tokens // self.page)
-        if need > self.max_blocks:
-            raise RuntimeError(
-                f"slot {i} needs {need} blocks > max_blocks="
-                f"{self.max_blocks} (request exceeds max_seq)")
-        while len(self.owned[i]) < need:
-            if not self.free:
-                return False
-            pg = self.free.pop()
-            self.table[i, len(self.owned[i])] = pg
-            self.owned[i].append(pg)
-        return True
-
-    def free_slot(self, i: int) -> None:
-        """Eviction: a finished slot's pages go back to the free list."""
-        self.free.extend(reversed(self.owned[i]))
-        self.owned[i] = []
-        self.table[i, :] = 0
-        self.length[i] = 0
-
-    # -- bookkeeping ----------------------------------------------------------
-
-    @property
-    def live_pages(self) -> int:
-        return sum(len(o) for o in self.owned)
-
-    def utilization(self) -> float:
-        """Fraction of allocatable pages currently owned by live slots."""
-        return self.live_pages / max(1, self.num_pages - 1)
-
-    def check(self) -> None:
-        """Free-list/table invariants (cheap; the property harness calls
-        this every fuzz step)."""
-        owned = [p for o in self.owned for p in o]
-        assert 0 not in owned, "null page allocated"
-        assert len(set(owned)) == len(owned), "page double-allocated"
-        assert not set(owned) & set(self.free), "page both owned and free"
-        assert len(set(self.free)) == len(self.free), "free-list duplicate"
-        assert set(owned) | set(self.free) == set(range(1, self.num_pages)), \
-            "page leaked"
-        for i, o in enumerate(self.owned):
-            assert list(self.table[i, :len(o)]) == o, "table/owned drift"
-            assert not self.table[i, len(o):].any(), "stale table entry"
-
-    # -- defrag ----------------------------------------------------------------
-
-    def defrag(self) -> None:
-        """Compact live pages to the contiguous pool prefix [1, live+1)
-        (one donated device gather per pool) and rewrite the block tables.
-        Purely physical: logical contents are untouched, so engine output
-        is bit-identical across defrags (property-tested)."""
-        perm = [0]                                    # new -> old; null stays
-        for i in range(self.B):
-            for j, pg in enumerate(self.owned[i]):
-                self.table[i, j] = len(perm)
-                perm.append(pg)
-        live = set(perm)
-        perm.extend(p for p in range(1, self.num_pages) if p not in live)
-        for i in range(self.B):
-            self.owned[i] = list(self.table[i, :len(self.owned[i])])
-        self.free = list(range(self.num_pages - 1, self.live_pages, -1))
-        perm_dev = jnp.asarray(np.asarray(perm, np.int32))
-        self.k = self._gather(self.k, perm_dev)
-        self.v = self._gather(self.v, perm_dev)
+def _lcp(a: List[int], b: List[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
 
 
 class PagedEngine(_SlotQueueBase):
     """Non-lockstep continuous batching over the paged KV cache.
 
     Every engine tick runs ONE fused ``decode_many_paged`` chunk
-    (``cfg.prefill_chunk`` compiled scan steps).  Each slot advances at its
-    OWN position (per-slot ``length``): a request admitted mid-flight
-    starts at position 0 of its own freshly-allocated pages — no shared
-    cache position to exhaust, no start-window masking, and rope positions
-    request-relative by construction (so outputs are token-identical to a
-    fresh single-request run, which the property harness fuzzes).
+    (``cfg.prefill_chunk`` compiled scan steps) under a per-step active
+    mask planned by the ``TickScheduler``: slot ``i`` advances for its
+    granted ``steps[i] <= chunk`` steps and idles for the rest (null-page
+    appends, frozen length) — a slot short on pages runs a PARTIAL chunk
+    instead of sitting out the tick.  Each slot advances at its OWN
+    position (per-slot ``length``), so a request admitted mid-flight
+    starts at position 0 of its own pages and rope is request-relative by
+    construction: outputs are token-identical to a fresh single-request
+    run (property-fuzzed), total traffic can outlive ``max_seq`` (pages
+    recycle through the free list), and the ONE jitted cell never
+    recompiles (regression-tested via its compile-cache size).
+
+    PREFIX SHARING: admission matches the new prompt against the token
+    history of every live slot; the longest common prefix (capped so at
+    least one prompt token is always fed — its logits seed the first
+    output) is mapped into the new slot's block table by reference
+    (``PagedKVCache.share``).  Shared pages are immutable — the scheduler
+    copy-on-write privatizes a shared block before any append touches it —
+    and eviction only returns a page once its refcount drains.
 
     Chunked prefill rides the SAME compiled cell: prompt tokens override
     the sampled output (forced mask) until the prompt drains, then sampled
-    tokens are collected — prefill + decode are one censusable module
-    family and never recompile.  Page lifecycle: admission allocates from
-    the free list, finished slots' pages are EVICTED back to it, a slot
-    that cannot get chunk capacity STALLS (active=False for the tick)
-    until eviction frees pages, and ``defrag()`` compacts the pool.
+    tokens are collected.  Page lifecycle: admission allocates from the
+    free list (or references shared pages), finished slots' references are
+    dropped on finish, a slot that cannot get capacity STALLS until
+    eviction frees pages, and ``defrag()`` compacts the pool.
 
     Decoder-only attention LMs only (a joining SSM slot would inherit the
     previous occupant's state; whisper needs per-request cross caches).
@@ -566,6 +333,8 @@ class PagedEngine(_SlotQueueBase):
                                page_size=cfg.page_size,
                                max_blocks=cfg.max_blocks,
                                num_pages=cfg.num_pages)
+        self.scheduler = TickScheduler(fairness=cfg.fairness,
+                                       tick_budget=cfg.tick_budget)
         self.key = jax.random.key(cfg.seed)
         self.slots = [_Slot() for _ in range(B)]
         self.queue: List[Request] = []
@@ -574,25 +343,55 @@ class PagedEngine(_SlotQueueBase):
         self._next_rid = 0
         self.steps_run = 0                # engine ticks (chunks)
         self.tokens_out = 0               # kept (non-discarded) tokens
+        self.tokens_appended = 0          # fresh K/V rows written (physical)
+        self.shared_tokens = 0            # prompt tokens served by reference
         self.joins = 0
         self.stalls = 0
-        self.util_sum = 0.0
-        self.util_max = 0.0
+        self.util_trace: List[float] = []        # per-tick page utilization
+        self.occupancy_trace: List[float] = []   # per-tick row occupancy
 
     # -- request lifecycle -----------------------------------------------------
+
+    def _find_donor(self, prompt: List[int]):
+        """Longest-common-prefix match of ``prompt`` against every live
+        slot's resident token history.  Returns (slot index, shared token
+        count) — (-1, 0) when nothing clears ``share_min_tokens``.  The
+        cap at ``len(prompt) - 1`` keeps the last prompt token always fed
+        (its logits seed the first sampled output)."""
+        best, donor = 0, -1
+        for j, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            n = min(_lcp(prompt, s.history), len(prompt) - 1)
+            if n > best:
+                best, donor = n, j
+        if best < max(1, self.cfg.share_min_tokens):
+            return -1, 0
+        return donor, best
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot.active or not self.queue:
                 continue
-            if not self.kv.ensure(i, 1):      # first page for the new slot
-                break                          # pool dry: wait for eviction
+            prompt = [int(t) for t in self.queue[0].prompt]
+            donor, n_shared = (-1, 0)
+            if self.cfg.prefix_sharing:
+                donor, n_shared = self._find_donor(prompt)
+            if n_shared == 0 and not self.kv.free:
+                break                      # pool dry: wait for eviction
             req = self.queue.pop(0)
-            prompt = [int(t) for t in req.prompt]
-            self.slots[i] = _Slot(rid=req.rid, forced=prompt[1:], out=[],
+            if donor >= 0:
+                self.kv.share(i, donor, n_shared)
+                self.shared_tokens += n_shared
+            else:
+                self.kv.length[i] = 0
+            # best-effort first page; a dry pool stalls (not deadlocks):
+            # the scheduler re-tries every tick as evictions refill the list
+            self.kv.ensure(i, n_shared + 1)
+            self.slots[i] = _Slot(rid=req.rid, forced=prompt[n_shared + 1:],
+                                  out=[], history=prompt[:n_shared],
                                   budget=req.max_new_tokens, active=True)
-            self.kv.length[i] = 0
-            self._feed[i] = prompt[0]
+            self._feed[i] = prompt[n_shared]
             self.joins += 1
 
     def _finish(self, i: int) -> None:
@@ -600,7 +399,7 @@ class PagedEngine(_SlotQueueBase):
         self.results[slot.rid] = slot.out
         self.slots[i] = _Slot()
         self._feed[i] = self.cfg.pad_id
-        self.kv.free_slot(i)                  # evict the slot's pages
+        self.kv.free_slot(i)              # drop the slot's page references
 
     # -- stepping ---------------------------------------------------------------
 
@@ -608,41 +407,28 @@ class PagedEngine(_SlotQueueBase):
         self.kv.defrag()
 
     def step(self) -> None:
-        """One engine tick: admit, then advance every slot with chunk
-        capacity by ``prefill_chunk`` fused steps."""
+        """One engine tick: admit, plan (partial grants / COW / fairness),
+        then advance every granted slot by its planned steps through the
+        one fused cell."""
         cfg = self.cfg
         chunk = max(1, cfg.prefill_chunk)
         self._admit()
-        B = len(self.slots)
-        active = np.zeros((B,), bool)
-        for i, slot in enumerate(self.slots):
-            if not slot.active:
-                continue
-            # reserve only the slot's REMAINING work, not the whole chunk:
-            # a slot that finishes mid-chunk overshoots into the null page
-            # (steps past its budget are discarded on the host), so pages
-            # past its last kept token never need to exist — without the
-            # cap a fitting workload could stall forever on pool capacity
-            remaining = len(slot.forced) + slot.budget - len(slot.out)
-            need = min(chunk, remaining)
-            if self.kv.ensure(i, int(self.kv.length[i]) + need):
-                active[i] = True
-            else:
-                self.stalls += 1              # waits for eviction next tick
-        if not active.any():
+        plan = self.scheduler.plan(self.slots, self.kv, chunk)
+        self.stalls += plan.stalled
+        if not plan.any_work:
             if self.busy:
                 raise RuntimeError(
                     f"page pool exhausted: {len(self.kv.free)} free pages "
-                    f"cannot give any slot chunk capacity (num_pages="
+                    f"cannot give any slot step capacity (num_pages="
                     f"{self.kv.num_pages}, page={self.kv.page})")
             return
+        B = len(self.slots)
+        steps = plan.steps
 
         forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
         forced_mask = np.zeros((chunk, B), bool)
         for i, slot in enumerate(self.slots):
-            if not active[i]:
-                continue
-            for s in range(min(len(slot.forced), chunk)):
+            for s in range(min(len(slot.forced), int(steps[i]))):
                 forced_tok[s, i] = slot.forced[s]
                 forced_mask[s, i] = True
 
@@ -651,25 +437,30 @@ class PagedEngine(_SlotQueueBase):
                  "length": jnp.asarray(self.kv.length)}
         toks, cache, self.key = self._many(
             self.params, jnp.asarray(self._feed)[:, None], cache, self.key,
-            jnp.asarray(active), jnp.asarray(forced_tok),
+            jnp.asarray(plan.active), jnp.asarray(forced_tok),
             jnp.asarray(forced_mask),
             num_steps=chunk, temperature=cfg.temperature)
         self.kv.k = cache["k"]
         self.kv.v = cache["v"]
-        self.kv.length[active] += chunk       # mirrors the device increment
+        self.kv.length += steps               # mirrors the device increment
+        self.tokens_appended += int(steps.sum())
         self.steps_run += 1
-        util = self.kv.utilization()
-        self.util_sum += util
-        self.util_max = max(self.util_max, util)
+        self.util_trace.append(self.kv.utilization())
+        self.occupancy_trace.append(self.kv.occupancy())
 
         toks_np = np.asarray(toks)            # (chunk, B)
         for i, slot in enumerate(self.slots):
-            if not active[i]:
+            si = int(steps[i])
+            if not slot.active or si == 0:
                 continue
-            n_forced = min(len(slot.forced), chunk)
+            # tokens fed this tick = this tick's K/V rows (donor index)
+            slot.history.append(int(self._feed[i]))
+            slot.history.extend(int(toks_np[s, i]) for s in range(si - 1))
+            slot.served += si
+            n_forced = min(len(slot.forced), si)
             del slot.forced[:n_forced]
             finished = False
-            for s in range(n_forced, chunk):
+            for s in range(n_forced, si):
                 if finished:
                     break                      # chunk overshoot: discarded
                 tok = int(toks_np[s, i])
@@ -681,4 +472,18 @@ class PagedEngine(_SlotQueueBase):
             if finished:
                 self._finish(i)
             else:
-                self._feed[i] = toks_np[-1, i]
+                self._feed[i] = toks_np[si - 1, i]
+
+    # -- bookkeeping -------------------------------------------------------------
+
+    @property
+    def logical_tokens(self) -> int:
+        """Tokens logically resident over the run: fresh appends plus
+        prompt tokens served by page reference."""
+        return self.tokens_appended + self.shared_tokens
+
+    @property
+    def logical_physical_ratio(self) -> float:
+        """Prefix-sharing win: logical tokens per physically-written token
+        (1.0 when nothing was shared)."""
+        return self.logical_tokens / max(1, self.tokens_appended)

@@ -1,0 +1,114 @@
+"""Tick scheduler: packs chunked-prefill and decode work into each engine
+tick under page-pool pressure.
+
+Every ``PagedEngine`` tick runs ONE fused ``decode_many_paged`` chunk of
+``cfg.prefill_chunk`` compiled scan steps — the compile universe is exactly
+one module, so scheduling freedom lives entirely in the PER-STEP ACTIVE
+MASK: slot ``i`` advances for the first ``steps[i] <= chunk`` steps of the
+tick and idles (null-page appends, frozen length) for the rest.
+
+The scheduler turns the old all-or-nothing reservation — a slot either got
+its whole chunk's pages or sat out the tick — into packing:
+
+  * PARTIAL GRANTS — a slot whose full chunk does not fit the free list is
+    granted as many steps as its pages allow instead of stalling outright,
+    so prefill keeps streaming through partially-idle chunks;
+  * COW PRIVATIZATION — before granting steps that would append into a
+    page shared with another slot (refcount > 1), the shared block is
+    copy-on-write privatized; if no page is free for the copy the grant is
+    clipped to the page boundary (never mutating a shared page);
+  * FAIRNESS (``cfg.fairness``) — page-grant order: ``"least-served"``
+    gives pages to the slot with the fewest fresh tokens appended so far
+    (a long prefill cannot starve late joiners), ``"slot-order"`` is the
+    legacy first-fit by slot index;
+  * BUDGET (``cfg.tick_budget``) — caps the fresh tokens appended per tick
+    across all slots (0 = uncapped), smoothing page consumption so
+    admissions always find headroom.
+
+The scheduler owns allocation policy only: it mutates the ``PagedKVCache``
+through ``ensure()`` / ``cow()`` and returns a ``TickPlan``; the engine
+owns the device step and the request lifecycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.serve.cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class TickPlan:
+    """One tick's work assignment."""
+    steps: np.ndarray          # (B,) int32 — fused steps granted per slot
+    active: np.ndarray         # (chunk, B) bool — per-step active mask
+    stalled: int = 0           # active slots that wanted steps but got none
+    cow_copies: int = 0        # pages privatized for this tick's appends
+
+    @property
+    def any_work(self) -> bool:
+        return bool(self.steps.any())
+
+
+class TickScheduler:
+    """Allocates each tick's per-slot step grants (see module docstring)."""
+
+    def __init__(self, fairness: str = "least-served", tick_budget: int = 0):
+        if fairness not in ("least-served", "slot-order"):
+            raise ValueError(f"unknown fairness policy: {fairness!r}")
+        self.fairness = fairness
+        self.tick_budget = tick_budget
+
+    def _order(self, slots) -> List[int]:
+        idx = range(len(slots))
+        if self.fairness == "least-served":
+            return sorted(idx, key=lambda i: (slots[i].served, i))
+        return list(idx)
+
+    def plan(self, slots, kv: PagedKVCache, chunk: int) -> TickPlan:
+        """Grant steps slot by slot in fairness order.  For each slot:
+        cap the want at its remaining work (budget + unfed prompt — chunk
+        overshoot past the request's last kept token lands on the null
+        page and needs no pages), privatize shared blocks the appends
+        would touch, then reserve pages for the largest feasible grant."""
+        B = len(slots)
+        steps = np.zeros((B,), np.int32)
+        budget = self.tick_budget if self.tick_budget > 0 else chunk * B
+        stalled = 0
+        cows = 0
+        for i in self._order(slots):
+            slot = slots[i]
+            if not slot.active or budget <= 0:
+                continue
+            remaining = len(slot.forced) + slot.budget - len(slot.out)
+            want = min(chunk, remaining, budget)
+            if want <= 0:
+                continue
+            length = int(kv.length[i])
+            # COW FIRST, then reserve: privatizing a shared block needs a
+            # free page, and ensure() extending the table could consume
+            # the last one — COW-before-ensure lets the slot privatize
+            # and advance within its existing pages instead of hoarding a
+            # fresh page it cannot write past (regression-tested)
+            for b in kv.shared_blocks(i, length, length + want):
+                if kv.cow(i, b):
+                    cows += 1
+                else:
+                    # no page free for the copy: stop before the shared
+                    # block — a shared page is never appended to
+                    want = max(0, b * kv.page - length)
+                    break
+            granted = 0
+            for s in range(want, 0, -1):
+                if kv.ensure(i, length + s):
+                    granted = s
+                    break
+            if granted == 0:
+                stalled += 1
+            steps[i] = granted
+            budget -= granted
+        active = np.arange(chunk)[:, None] < steps[None, :]
+        return TickPlan(steps=steps, active=active, stalled=stalled,
+                        cow_copies=cows)

@@ -1,10 +1,12 @@
 """Fused decode subsystem tests: decode_many vs the legacy per-token loop
 (greedy AND seeded temperature must be token-identical), Pallas
 decode-attention (dense AND paged) vs the jnp references in interpret mode,
-per-slot stop conditions, slot release/join in the continuous-batching
-engine, the lockstep row-wraparound fix, and the census-ability of the
-fused/paged decode programs (paged transaction count scales with live
-tokens, not max_seq)."""
+per-slot stop conditions, the paged engine's continuous-batching guarantees
+(mid-flight joins, first-request token-identity, outliving max_seq, zero
+recompiles — migrated from the retired dense lockstep engine), and the
+census-ability of the fused/paged decode programs (paged transaction count
+scales with live tokens, not max_seq; COW page-copy bytes scale with pages
+copied, not pool size)."""
 import dataclasses
 
 import numpy as np
@@ -14,8 +16,7 @@ import pytest
 
 from repro.configs import get
 from repro.models import get_model
-from repro.serve.engine import (
-    ContinuousBatchingEngine, PagedEngine, ServeConfig, ServingEngine)
+from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
 
 
 @pytest.fixture(scope="module")
@@ -219,19 +220,21 @@ def test_pallas_decode_path_token_identical(small_model):
 
 
 # ---------------------------------------------------------------------------
-# continuous batching
+# paged continuous batching (the regression guarantees migrated from the
+# retired dense lockstep engine)
 # ---------------------------------------------------------------------------
 
-def test_continuous_first_request_matches_generate(small_model):
-    """A request admitted at pos=0 decodes exactly like generate_batch
-    (prefill-by-decode == prefill: same causal math, same positions)."""
+def test_paged_first_request_matches_generate(small_model):
+    """A request admitted into an idle engine decodes exactly like
+    generate_batch (chunked prefill-by-decode == prefill: same causal
+    math, same request-relative positions)."""
     model, params = small_model
     prompt = _prompts(model, n=1, seed=9)[0]
-    cbe = ContinuousBatchingEngine(
-        model, params, ServeConfig(max_batch=2, max_seq=64,
-                                   max_new_tokens=6))
-    rid = cbe.submit(prompt)
-    res = cbe.run()
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=2, max_seq=64, max_new_tokens=6,
+                                 page_size=8, prefill_chunk=3))
+    rid = pe.submit(prompt)
+    res = pe.run()
     single = ServingEngine(
         model, params, ServeConfig(max_batch=1, max_seq=48,
                                    max_new_tokens=6)
@@ -239,39 +242,71 @@ def test_continuous_first_request_matches_generate(small_model):
     assert res[rid] == single
 
 
-def test_continuous_slot_release_and_join(small_model):
-    """More requests than slots: finished sequences release their slot and
-    queued requests join mid-flight (no recompilation, per-slot windows)."""
+def test_paged_slot_release_and_join(small_model):
+    """More requests than slots: finished sequences release their pages and
+    queued requests join mid-flight (no recompilation, per-slot pages)."""
     model, params = small_model
-    cfg = ServeConfig(max_batch=2, max_seq=128, max_new_tokens=4)
-    cbe = ContinuousBatchingEngine(model, params, cfg)
+    cfg = ServeConfig(max_batch=2, max_seq=128, max_new_tokens=4,
+                      page_size=8, prefill_chunk=4)
+    pe = PagedEngine(model, params, cfg)
     prompts = _prompts(model, n=5, seed=4)
-    rids = [cbe.submit(p) for p in prompts]
-    res = cbe.run()
+    rids = [pe.submit(p) for p in prompts]
+    res = pe.run()
     assert set(res) == set(rids)
     assert all(len(res[r]) == 4 for r in rids)
-    assert cbe.joins == 5                       # every request got a slot
-    assert all(not s.active for s in cbe.slots)
+    assert pe.joins == 5                        # every request got a slot
+    assert all(not s.active for s in pe.slots)
     V = model.cfg.vocab_size
     assert all(0 <= t < V for r in rids for t in res[r])
     # late joiners genuinely joined mid-flight: more joins than slots
-    assert cbe.joins > cfg.max_batch
+    assert pe.joins > cfg.max_batch
 
 
-def test_continuous_rejects_empty_prompt(small_model):
-    model, params = small_model
-    cbe = ContinuousBatchingEngine(
-        model, params, ServeConfig(max_batch=2, max_seq=32))
-    with pytest.raises(ValueError):
-        cbe.submit(np.array([], np.int32))
-
-
-def test_continuous_rejects_ssm():
-    cfg = get("falcon-mamba-7b").reduced()
+def test_paged_outlives_max_seq_token_identical():
+    """REGRESSION (the retired lockstep engine's wraparound guarantee): a
+    long-lived engine must keep serving after total traffic far exceeds
+    max_seq — pages recycle through the free list — and every request must
+    stay token-identical to a fresh run.  rope_theta=0 makes attention
+    position-free, so ANY leak of a previous occupant's rows changes the
+    softmax and breaks exact token-identity with the oracle."""
+    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), rope_theta=0.0)
     model = get_model(cfg)
-    with pytest.raises(ValueError):
-        ContinuousBatchingEngine(model, None,
-                                 ServeConfig(max_batch=2, max_seq=32))
+    params = model.init(jax.random.key(0))
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=2, max_seq=32, max_new_tokens=4,
+                                 page_size=4, prefill_chunk=4))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           size=rng.randint(5, 10)).astype(np.int32)
+               for _ in range(8)]
+    rids = [pe.submit(p) for p in prompts]
+    res = pe.run()
+    # total token traffic (prompts + outputs) well past max_seq
+    assert sum(len(p) + 4 for p in prompts) > 2 * pe.cfg.max_seq
+    oracle = ServingEngine(model, params,
+                           ServeConfig(max_batch=1, max_seq=32,
+                                       max_new_tokens=4))
+    for rid, p in zip(rids, prompts):
+        assert res[rid] == oracle.generate_batch([p])[0], \
+            f"rid={rid}: read rows outside its own pages"
+
+
+def test_paged_zero_recompiles(small_model):
+    """The whole engine lifetime — admissions, mid-flight joins, stalls,
+    partial grants, evictions — reuses ONE compiled decode cell."""
+    model, params = small_model
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4,
+                                 page_size=4, num_pages=13,
+                                 prefill_chunk=3))
+    if not hasattr(pe._many, "_cache_size"):
+        pytest.skip("jit cache-size introspection unavailable")
+    rng = np.random.RandomState(2)
+    for n in (3, 7, 5, 9, 4, 6):
+        pe.submit(rng.randint(0, model.cfg.vocab_size,
+                              size=n).astype(np.int32))
+    pe.run()
+    assert pe._many._cache_size() == 1
 
 
 # ---------------------------------------------------------------------------
@@ -338,6 +373,37 @@ def test_decode_many_paged_matches_stepwise_temperature(small_model):
     assert list(np.asarray(cache_f["length"])) == [steps, steps]
 
 
+def test_decode_many_paged_per_step_active(small_model):
+    """A (num_steps, B) active mask packs PARTIAL chunks: a slot active for
+    its first s steps advances exactly s tokens, its emitted stream is
+    frozen from step s on (the host reads a stable value at any step >=
+    s-1), and its tokens for the active prefix are identical to a full-
+    chunk run."""
+    model, params = small_model
+    B, steps, page, nb, pool = 2, 4, 4, 3, 7
+
+    def fresh():
+        cache = model.init_paged_cache(B, nb, page, pool)
+        tbl = np.zeros((B, nb), np.int32)
+        tbl[0] = [1, 2, 3]
+        tbl[1] = [4, 5, 6]
+        return dict(cache, table=jnp.asarray(tbl))
+
+    tok0 = jnp.asarray([[3], [4]], jnp.int32)
+    key = jax.random.key(0)
+    full, cache_full, _ = model.decode_many_paged(
+        params, tok0, fresh(), key, jnp.ones((B,), bool), num_steps=steps)
+    mask = np.ones((steps, B), bool)
+    mask[2:, 1] = False                       # slot 1: only 2 of 4 steps
+    part, cache_part, _ = model.decode_many_paged(
+        params, tok0, fresh(), key, jnp.asarray(mask), num_steps=steps)
+    full, part = np.asarray(full), np.asarray(part)
+    np.testing.assert_array_equal(part[:, 0], full[:, 0])   # slot 0 untouched
+    np.testing.assert_array_equal(part[:2, 1], full[:2, 1])  # active prefix
+    assert all(int(t) == int(part[1, 1]) for t in part[2:, 1])  # frozen
+    assert list(np.asarray(cache_part["length"])) == [steps, 2]
+
+
 def test_decode_step_paged_inactive_slot_frozen(small_model):
     """An inactive slot must not advance its length and must not perturb
     any live page (its append lands on the null page 0)."""
@@ -356,96 +422,6 @@ def test_decode_step_paged_inactive_slot_frozen(small_model):
     after_k = np.asarray(cache2["k"])
     np.testing.assert_array_equal(before_k[:, 2:], after_k[:, 2:])  # pages >= 2
     assert not np.array_equal(before_k[:, 1], after_k[:, 1])        # slot 0 wrote
-
-
-# ---------------------------------------------------------------------------
-# lockstep start-window leak / row wraparound (the ROADMAP fix)
-# ---------------------------------------------------------------------------
-
-def test_lockstep_wraparound_no_start_leak():
-    """REGRESSION (pre-fix: RuntimeError 'KV cache exhausted'): a long-lived
-    lockstep engine must survive past max_seq total rows via row wraparound,
-    and a slot admitted at any engine step must not read rows < start even
-    after wraparound.  rope_theta=0 makes attention position-free, so ANY
-    leak of a previous occupant's rows changes the softmax and breaks exact
-    token-identity with the fresh-run oracle."""
-    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), rope_theta=0.0)
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0))
-    cbe = ContinuousBatchingEngine(model, params,
-                                   ServeConfig(max_batch=2, max_seq=32,
-                                               max_new_tokens=4))
-    rng = np.random.RandomState(7)
-    prompts = [rng.randint(0, cfg.vocab_size,
-                           size=rng.randint(5, 10)).astype(np.int32)
-               for _ in range(8)]
-    rids = [cbe.submit(p) for p in prompts]
-    res = cbe.run()
-    assert cbe.wraps >= 1, "schedule must actually wrap to regress the leak"
-    oracle = ServingEngine(model, params,
-                           ServeConfig(max_batch=1, max_seq=32,
-                                       max_new_tokens=4))
-    for rid, p in zip(rids, prompts):
-        assert res[rid] == oracle.generate_batch([p])[0], \
-            f"rid={rid}: read rows outside its window after wraparound"
-
-
-def test_lockstep_wraparound_rope_positions_absolute(small_model):
-    """The wrap slides cache ROWS but must NOT rebase rope positions:
-    pos_base keeps the rotation stream absolute, so decoding from the
-    shifted cache yields the same logits as from the unshifted one."""
-    model, params = small_model
-    cbe = ContinuousBatchingEngine(model, params,
-                                   ServeConfig(max_batch=2, max_seq=32,
-                                               max_new_tokens=4))
-    rng = np.random.RandomState(11)
-    for _ in range(10):
-        cbe.submit(rng.randint(0, model.cfg.vocab_size,
-                               size=rng.randint(5, 9)).astype(np.int32))
-    while cbe.pos + 1 < cbe.cfg.max_seq:         # run up to the wrap point
-        cbe.step()
-        assert cbe.busy, "schedule drained before reaching max_seq"
-    snap = {k: jnp.array(v) for k, v in cbe.cache.items()}   # pre-wrap copy
-    feed = jnp.asarray(cbe._feed)[:, None]
-    cbe._wrap()
-    shift = int(snap["pos"]) - int(cbe.cache["pos"])
-    assert shift > 0
-    assert int(cbe.cache["pos_base"]) == int(snap["pos_base"]) + shift
-    step = jax.jit(model.decode_step)
-    logits_pre, _ = step(params, feed, snap)
-    logits_post, _ = step(params, feed, cbe.cache)
-    np.testing.assert_allclose(np.asarray(logits_pre),
-                               np.asarray(logits_post), rtol=2e-4, atol=2e-4)
-
-
-def test_lockstep_wraparound_survives_with_rope(small_model):
-    """With rope on, the wrapped engine still completes every request and
-    wraps at least once (token-identity is covered by the rope-free test:
-    rope outputs differ from a fresh run only in absolute phase)."""
-    model, params = small_model
-    cbe = ContinuousBatchingEngine(model, params,
-                                   ServeConfig(max_batch=2, max_seq=32,
-                                               max_new_tokens=4))
-    rng = np.random.RandomState(4)
-    rids = [cbe.submit(rng.randint(0, model.cfg.vocab_size,
-                                   size=rng.randint(5, 10)).astype(np.int32))
-            for _ in range(8)]
-    res = cbe.run()
-    assert cbe.wraps >= 1
-    assert set(res) == set(rids)
-    assert all(len(res[r]) == 4 for r in rids)
-
-
-def test_lockstep_wrap_raises_when_active_slot_spans_row0(small_model):
-    """A single request longer than max_seq can never be wrapped away: the
-    engine must still fail loudly (and point at the paged engine)."""
-    model, params = small_model
-    cbe = ContinuousBatchingEngine(model, params,
-                                   ServeConfig(max_batch=1, max_seq=12,
-                                               max_new_tokens=32))
-    cbe.submit(np.arange(5, dtype=np.int32))
-    with pytest.raises(RuntimeError, match="PagedEngine"):
-        cbe.run()
 
 
 # ---------------------------------------------------------------------------
@@ -516,6 +492,92 @@ def test_paged_decode_census_scales_with_live_tokens():
     assert d_1024.hbm_bytes > 1.5 * d_512.hbm_bytes
     # and at equal capacity the paged step moves a fraction of the dense one
     assert d_1024.hbm_bytes > 2 * p_big_pool.hbm_bytes
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cow_page_copy_census_scales_with_pages(dtype):
+    """The COW page copy's census bytes scale with the pages COPIED, never
+    with the pool — standalone (the engine's jitted copy) and with the
+    copy fused into an append step.  bf16 exercises the dtype-bracket
+    elision: the CPU backend wraps the in-place update in whole-pool
+    converts that would otherwise charge 3x the pool per copy (TPU updates
+    the storage dtype natively)."""
+    from repro.core.hlo_counters import census_from_compiled
+    from repro.serve.cache import _copy_pages
+    L, page, KV, hd = 4, 16, 2, 16
+
+    def census(P, n):
+        pool = jax.ShapeDtypeStruct((L, P, page, KV, hd), dtype)
+        idx = jax.ShapeDtypeStruct((n,), jnp.int32)
+        compiled = jax.jit(_copy_pages, donate_argnums=(0,)).lower(
+            pool, idx, idx).compile()
+        return census_from_compiled(compiled)
+
+    page_bytes = L * page * KV * hd * jnp.dtype(dtype).itemsize
+    page_f32 = L * page * KV * hd * 4       # compute-dtype page (CPU widens)
+    c2_small, c2_big = census(33, 2), census(65, 2)
+    c4 = census(65, 4)
+    # pool-size independence: doubling the pool moves zero extra bytes
+    assert c2_big.hbm_bytes == c2_small.hbm_bytes
+    # page scaling: doubling the pages copied doubles the traffic
+    assert c4.hbm_bytes == pytest.approx(2 * c2_big.hbm_bytes, rel=0.01)
+    assert c4.irregular_bytes == pytest.approx(2 * c2_big.irregular_bytes,
+                                               rel=0.01)
+    # absolute sanity: a handful of page-moves per copied page (the
+    # fusion-boundary model counts this lowering's intermediate page
+    # materializations), nowhere near the 33-page pool per copy
+    assert c2_big.hbm_bytes < 2 * 12 * page_f32
+    assert c2_big.hbm_bytes >= 2 * 2 * page_bytes      # read src + write dst
+
+    # in-fusion: the copy composed with an append into the private page
+    # stays page-scaled and pool-independent
+    def cow_append(pool, dst, src, kv_new, row):
+        pool = _copy_pages(pool, dst, src)
+        return pool.at[:, dst[0], row].set(kv_new)
+
+    def fused_census(P):
+        pool = jax.ShapeDtypeStruct((L, P, page, KV, hd), dtype)
+        idx = jax.ShapeDtypeStruct((1,), jnp.int32)
+        kvn = jax.ShapeDtypeStruct((L, KV, hd), dtype)
+        row = jax.ShapeDtypeStruct((), jnp.int32)
+        compiled = jax.jit(cow_append, donate_argnums=(0,)).lower(
+            pool, idx, idx, kvn, row).compile()
+        return census_from_compiled(compiled)
+
+    f_small, f_big = fused_census(33), fused_census(65)
+    assert f_big.hbm_bytes == f_small.hbm_bytes
+    assert f_big.hbm_bytes < 12 * page_f32
+
+
+def test_cow_bytes_zero_without_shared_writes(small_model):
+    """The engine-level half of the COW accounting claim: a workload that
+    never writes a shared page (sharing disabled entirely) performs ZERO
+    copy-on-write traffic, and a shared-prefix workload's COW bytes equal
+    copies x page_bytes exactly."""
+    model, params = small_model
+    rng = np.random.RandomState(1)
+    common = rng.randint(0, model.cfg.vocab_size, size=6).astype(np.int32)
+    # STAGGERED tails: sharing matches live slots only, so request
+    # lifetimes must overlap for a donor to exist at admission time
+    prompts = [np.concatenate([common,
+                               rng.randint(0, model.cfg.vocab_size,
+                                           size=n).astype(np.int32)])
+               for n in (3, 6, 2, 5)]
+    for sharing in (False, True):
+        pe = PagedEngine(model, params,
+                         ServeConfig(max_batch=2, max_seq=32,
+                                     max_new_tokens=3, page_size=4,
+                                     prefill_chunk=3,
+                                     prefix_sharing=sharing))
+        for p in prompts:
+            pe.submit(p)
+        pe.run()
+        if sharing:
+            assert pe.shared_tokens > 0
+            assert pe.kv.cow_bytes == pe.kv.cow_copies * pe.kv.page_bytes
+        else:
+            assert pe.kv.cow_copies == 0 and pe.kv.cow_bytes == 0
+            assert pe.shared_tokens == 0
 
 
 # ---------------------------------------------------------------------------

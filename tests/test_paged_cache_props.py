@@ -2,15 +2,23 @@
 
 Randomized admit/finish/join schedules drive the non-lockstep ``PagedEngine``
 (mixed prompt lengths and budgets, staggered submissions, mid-flight joins,
-random defrags) and assert two properties after every engine tick:
+random defrags, shared prompt prefixes) and assert three properties after
+every engine tick:
 
-  * SAFETY — the page free list never double-allocates or leaks: the null
-    page + every slot's owned pages + the free list partition the pool
+  * SAFETY — the refcounted page pool never double-allocates or leaks:
+    every page's refcount equals the number of block-table references to
+    it, and the null page + referenced pages + free list cover the pool
     exactly (``PagedKVCache.check()``);
+  * IMMUTABILITY — a page mapped into several block tables (prefix
+    sharing) is never mutated while shared: any append into it
+    copy-on-write privatizes the page first, so its content is frozen
+    across ticks for as long as its refcount exceeds one, and evicting a
+    sharer never frees a page another slot still references;
   * CORRECTNESS — every request's output is token-identical to a fresh
-    dense-cache ``ServingEngine`` run of the same prompt (the oracle): the
-    paged engine's per-slot positions mean a request admitted mid-flight
-    decodes exactly like a batch-of-one run from position 0.
+    dense-cache ``ServingEngine`` run of the same prompt (the oracle):
+    per-slot positions mean a mid-flight join decodes exactly like a
+    batch-of-one run from position 0, and a shared prefix references
+    bit-identical K/V rows, so sharing must be invisible in the tokens.
 
 Runs a SHORT fuzz profile (>= 200 randomized engine steps across seeds)
 under tier-1; the LONG profile is ``@pytest.mark.slow``
@@ -32,6 +40,7 @@ from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
 
 PROMPT_LENS = (3, 5, 8)
 BUDGETS = (3, 5)
+SUFFIX_LENS = (2, 3, 5)                  # shared-prefix fuzz tails
 
 
 @pytest.fixture(scope="module")
@@ -45,11 +54,44 @@ def harness():
     return model, params, oracle
 
 
+def _check_tick(pe):
+    """Per-tick invariants beyond ``kv.check()``: the engine's host token
+    history mirrors the device lengths exactly (the prefix-sharing donor
+    index must never drift from the cache)."""
+    pe.kv.check()
+    for i, slot in enumerate(pe.slots):
+        if slot.active:
+            assert len(slot.history) == int(pe.kv.length[i]), \
+                f"slot {i}: history/length drift"
+
+
+def _snapshot_shared(pe):
+    """Content snapshot of every page with refcount > 1 (k-pool rows)."""
+    k = np.asarray(pe.kv.k)
+    return {int(p): k[:, p].copy()
+            for p in range(1, pe.kv.num_pages) if pe.kv.refcount[p] > 1}
+
+
+def _assert_shared_frozen(pe, before):
+    """IMMUTABILITY: a page that was shared at the last tick and is STILL
+    shared now must be bit-identical — COW never mutates a page another
+    slot can still see."""
+    k = np.asarray(pe.kv.k)
+    for p, rows in before.items():
+        if pe.kv.refcount[p] > 1:
+            np.testing.assert_array_equal(
+                rows, k[:, p],
+                err_msg=f"shared page {p} mutated while refcount > 1")
+
+
 def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
                    n_requests: int, *, max_batch=3, page_size=4,
-                   prefill_chunk=3, defrag_every=0) -> int:
-    """One randomized schedule; returns engine ticks run.  Asserts the
-    free-list invariants every tick and oracle token-identity at the end."""
+                   prefill_chunk=3, defrag_every=0, prefixes=(),
+                   check_frozen=False) -> dict:
+    """One randomized schedule; returns engine stats.  Asserts the
+    refcount/free-list invariants every tick and oracle token-identity at
+    the end.  ``prefixes``: pool of common prompt prefixes — when set,
+    every prompt is prefix + short suffix, exercising sharing and COW."""
     rng = np.random.RandomState(seed)
     cfg = model.cfg
     pe = PagedEngine(model, params,
@@ -58,6 +100,17 @@ def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
                                  page_size=page_size,
                                  prefill_chunk=prefill_chunk))
     submitted = {}
+
+    def make_prompt():
+        if prefixes and rng.rand() < 0.85:
+            pre = prefixes[rng.randint(len(prefixes))]
+            suf = rng.randint(0, cfg.vocab_size,
+                              size=rng.choice(SUFFIX_LENS)).astype(np.int32)
+            return np.concatenate([pre, suf])
+        return rng.randint(0, cfg.vocab_size,
+                           size=rng.choice(PROMPT_LENS)).astype(np.int32)
+
+    shared_snap = {}
     for it in range(10 * min_ticks + 10 * n_requests + 100):
         # keep the schedule alive until BOTH the request count and the tick
         # count are met — late submissions are exactly the mid-flight joins
@@ -66,33 +119,40 @@ def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
                      or pe.steps_run < min_ticks)
         if want_more and rng.rand() < 0.6:
             for _ in range(rng.randint(1, 3)):
-                p = rng.randint(0, cfg.vocab_size,
-                                size=rng.choice(PROMPT_LENS)
-                                ).astype(np.int32)
+                p = make_prompt()
                 b = int(rng.choice(BUDGETS))
                 submitted[pe.submit(p, b)] = (p, b)
         if pe.busy:
             pe.step()
-            pe.kv.check()                     # no double-alloc, no leak
+            _check_tick(pe)                   # refcounts, no leak, no drift
+            if check_frozen:
+                _assert_shared_frozen(pe, shared_snap)
+                shared_snap = _snapshot_shared(pe)
         if defrag_every and pe.steps_run and \
                 pe.steps_run % defrag_every == 0:
             pe.defrag()
             pe.kv.check()
+            shared_snap = _snapshot_shared(pe)    # defrag renumbers pages
         if len(submitted) >= n_requests and not pe.busy \
                 and pe.steps_run >= min_ticks:
             break
     res = pe.run()
     pe.kv.check()
     # eviction returns every page: nothing live, nothing leaked after drain
+    # — and no page was ever freed while another slot still referenced it
+    # (a premature free would surface as a refcount/partition violation in
+    # the per-tick check above)
     assert pe.kv.live_pages == 0
     assert len(pe.kv.free) == pe.kv.num_pages - 1
+    assert (pe.kv.refcount[1:] == 0).all()
     assert set(res) == set(submitted)
     assert pe.joins == len(submitted)
     for rid, (p, b) in submitted.items():
         want = oracle.generate_batch([p], max_new_tokens=b)[0]
         assert res[rid] == want, f"seed={seed} rid={rid}: paged output " \
             f"diverged from the fresh dense-cache oracle"
-    return pe.steps_run
+    return {"ticks": pe.steps_run, "shared": pe.shared_tokens,
+            "cow": pe.kv.cow_copies}
 
 
 # ---------------------------------------------------------------------------
@@ -102,9 +162,37 @@ def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
 @pytest.mark.parametrize("seed,defrag_every", [(0, 0), (1, 5), (2, 3)])
 def test_fuzz_schedule_token_identical(harness, seed, defrag_every):
     model, params, oracle = harness
-    ticks = _fuzz_schedule(model, params, oracle, seed, min_ticks=67,
+    stats = _fuzz_schedule(model, params, oracle, seed, min_ticks=67,
                            n_requests=12, defrag_every=defrag_every)
-    assert ticks >= 67                        # 3 seeds x 67 >= 200 steps
+    assert stats["ticks"] >= 67               # 3 seeds x 67 >= 200 steps
+
+
+def test_fuzz_shared_prefix_token_identical(harness):
+    """The sharing fuzz: prompts drawn from common-prefix families, so
+    admissions share resident pages and appends into the shared trailing
+    page exercise COW — outputs must stay oracle-identical and shared
+    pages bit-frozen (checked tick by tick)."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(100)
+    prefixes = tuple(rng.randint(0, model.cfg.vocab_size,
+                                 size=n).astype(np.int32) for n in (6, 9))
+    stats = _fuzz_schedule(model, params, oracle, seed=3, min_ticks=40,
+                           n_requests=10, prefixes=prefixes,
+                           check_frozen=True)
+    assert stats["shared"] > 0, "schedule never shared a prefix"
+    assert stats["cow"] > 0, "schedule never exercised copy-on-write"
+
+
+def test_fuzz_shared_prefix_with_defrag(harness):
+    """Sharing + periodic defrag: renumbering must preserve refcounts and
+    multi-table references (one physical move, all tables rewritten)."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(200)
+    prefixes = (rng.randint(0, model.cfg.vocab_size,
+                            size=7).astype(np.int32),)
+    stats = _fuzz_schedule(model, params, oracle, seed=5, min_ticks=30,
+                           n_requests=8, prefixes=prefixes, defrag_every=4)
+    assert stats["shared"] > 0
 
 
 def test_fuzz_single_slot_chunked(harness):
@@ -115,7 +203,8 @@ def test_fuzz_single_slot_chunked(harness):
 
 
 def test_fuzz_page_size_one(harness):
-    """page_size=1 maximizes allocation churn (one page per token)."""
+    """page_size=1 maximizes allocation churn (one page per token; every
+    shared page is full, so sharing never needs COW)."""
     model, params, oracle = harness
     _fuzz_schedule(model, params, oracle, seed=11, min_ticks=25,
                    n_requests=5, max_batch=2, page_size=1, prefill_chunk=2)
@@ -129,9 +218,21 @@ def test_fuzz_page_size_one(harness):
 @pytest.mark.parametrize("seed", [101, 202])
 def test_fuzz_schedule_long(harness, seed):
     model, params, oracle = harness
-    ticks = _fuzz_schedule(model, params, oracle, seed, min_ticks=500,
+    stats = _fuzz_schedule(model, params, oracle, seed, min_ticks=500,
                            n_requests=60, defrag_every=7)
-    assert ticks >= 500
+    assert stats["ticks"] >= 500
+
+
+@pytest.mark.slow
+def test_fuzz_shared_prefix_long(harness):
+    model, params, oracle = harness
+    rng = np.random.RandomState(300)
+    prefixes = tuple(rng.randint(0, model.cfg.vocab_size,
+                                 size=n).astype(np.int32) for n in (5, 9))
+    stats = _fuzz_schedule(model, params, oracle, seed=303, min_ticks=400,
+                           n_requests=50, prefixes=prefixes,
+                           defrag_every=9, check_frozen=True)
+    assert stats["shared"] > 0 and stats["cow"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -163,8 +264,8 @@ def test_eos_truncates_like_oracle(harness):
 
 
 def test_stall_recovers_via_eviction(harness):
-    """A slot that cannot get chunk capacity stalls (active=False for the
-    tick) and resumes after another slot finishes and its pages are
+    """A slot that cannot get step capacity stalls (zero granted steps for
+    the tick) and resumes after another slot finishes and its pages are
     evicted — no deadlock, outputs still oracle-identical."""
     model, params, oracle = harness
     # 3 allocatable pages, two slots each eventually needing 2 pages
@@ -181,11 +282,132 @@ def test_stall_recovers_via_eviction(harness):
         assert res[rid] == oracle.generate_batch([p], max_new_tokens=5)[0]
 
 
+def test_scheduler_partial_grant_budget_fairness(harness):
+    """The tick scheduler's packing policies, deterministically: a slot
+    short on pages gets a PARTIAL grant (prefix of the tick's steps)
+    instead of stalling outright; ``tick_budget`` caps total fresh tokens
+    per tick; least-served fairness hands pages to the slot with the
+    fewest tokens appended."""
+    from repro.serve.cache import PagedKVCache
+    from repro.serve.engine import _Slot
+    from repro.serve.scheduler import TickScheduler
+    model, params, _ = harness
+
+    def slots(served=(0, 0)):
+        return [_Slot(rid=i, forced=list(range(9)), budget=3, served=s,
+                      active=True) for i, s in enumerate(served)]
+
+    # 5 allocatable single-row pages, two slots wanting chunk 4 each:
+    # first-in-order takes its full chunk, the other packs the 1 left
+    kv = PagedKVCache(model, 2, 16, page_size=1, num_pages=6)
+    plan = TickScheduler().plan(slots(), kv, chunk=4)
+    assert list(plan.steps) == [4, 1]
+    assert plan.active[:, 0].all()
+    assert plan.active[0, 1] and not plan.active[1:, 1].any()
+    assert plan.stalled == 0
+
+    # the budget knob caps the tick's total fresh tokens
+    kv = PagedKVCache(model, 2, 16, page_size=1, num_pages=12)
+    plan = TickScheduler(tick_budget=5).plan(slots(), kv, chunk=4)
+    assert int(plan.steps.sum()) == 5
+
+    # least-served fairness: the starved slot allocates first
+    kv = PagedKVCache(model, 2, 16, page_size=1, num_pages=6)
+    plan = TickScheduler().plan(slots(served=(10, 0)), kv, chunk=4)
+    assert list(plan.steps) == [1, 4]
+    # legacy slot-order: first slot wins regardless of service
+    kv = PagedKVCache(model, 2, 16, page_size=1, num_pages=6)
+    plan = TickScheduler(fairness="slot-order").plan(
+        slots(served=(10, 0)), kv, chunk=4)
+    assert list(plan.steps) == [4, 1]
+
+
+def test_scheduler_cow_before_ensure(harness):
+    """REGRESSION: with ONE free page and an append landing in a shared
+    partial page, the scheduler must spend the page on the COW copy (and
+    advance within existing pages), not on extending the table — the old
+    ensure-first order consumed the page, failed the COW, granted 0 to a
+    completable slot, and the engine raised pool-exhausted."""
+    from repro.serve.cache import PagedKVCache
+    from repro.serve.engine import _Slot
+    from repro.serve.scheduler import TickScheduler
+    model, params, _ = harness
+    kv = PagedKVCache(model, 2, 8, page_size=4, num_pages=3)  # 2 allocatable
+    # donor wrote 2 tokens into page A; sharer references it at length 2
+    assert kv.ensure(0, 2)
+    kv.length[0] = 2
+    kv.share(1, 0, 2)
+    assert len(kv.free) == 1 and kv.refcount[kv.owned[0][0]] == 2
+    slots = [_Slot(rid=0, forced=[1, 2, 3], budget=3, active=True), _Slot()]
+    plan = TickScheduler().plan(slots, kv, chunk=4)
+    assert kv.cow_copies == 1                # the free page went to the COW
+    assert int(plan.steps[0]) == 2           # advances within the new page
+    assert plan.stalled == 0
+
+
+def test_cow_preserves_shared_rows(harness):
+    """Copy-on-write never mutates rows another slot can still see: share
+    a PARTIAL page between two slots, let both append into it on the next
+    tick (COW must fire for whoever writes while the page is shared), and
+    verify the shared token rows of the original physical page are
+    bit-identical afterwards — the surviving owner may only have written
+    rows past the shared prefix."""
+    model, params, oracle = harness
+    sc = ServeConfig(max_batch=2, max_seq=32, max_new_tokens=4, page_size=4,
+                     prefill_chunk=2)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(17)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=6).astype(np.int32)
+    rid_a = pe.submit(prompt)             # donor
+    pe.step()                             # donor at 2 tokens: page 0 PARTIAL
+    rid_b = pe.submit(prompt)             # sharer: same 6-token prompt
+    pe._admit()                           # shares the partial page
+    n_shared = pe.shared_tokens
+    assert 0 < n_shared < pe.kv.page      # partial-page share
+    shared = [p for p in range(1, pe.kv.num_pages) if pe.kv.refcount[p] > 1]
+    assert shared, "admission did not map a page into both tables"
+    before = {p: np.asarray(pe.kv.k)[:, p, :n_shared].copy() for p in shared}
+    pe.step()                             # both append into the shared page
+    assert pe.kv.cow_copies > 0
+    after = np.asarray(pe.kv.k)
+    for p, rows in before.items():
+        np.testing.assert_array_equal(
+            rows, after[:, p, :n_shared],
+            err_msg=f"write into shared page {p} reached shared rows")
+    res = pe.run()                        # drain: outputs stay exact
+    for rid in (rid_a, rid_b):
+        assert res[rid] == oracle.generate_batch([prompt],
+                                                 max_new_tokens=4)[0]
+
+
+def test_sharer_survives_donor_eviction(harness):
+    """Evicting the donor must not free pages the sharer still references:
+    the donor finishes first, its exclusive pages return to the free list,
+    the shared ones stay live until the sharer finishes."""
+    model, params, oracle = harness
+    sc = ServeConfig(max_batch=2, max_seq=32, max_new_tokens=2, page_size=4,
+                     prefill_chunk=4)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(23)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=6).astype(np.int32)
+    rid_a = pe.submit(prompt, 2)          # donor: short budget
+    pe.step()                             # donor live at 4 prompt tokens
+    rid_b = pe.submit(prompt, 5)          # sharer: outlives the donor
+    res = pe.run()
+    pe.kv.check()
+    assert pe.shared_tokens > 0
+    assert res[rid_a] == oracle.generate_batch([prompt],
+                                               max_new_tokens=2)[0]
+    assert res[rid_b] == oracle.generate_batch([prompt],
+                                               max_new_tokens=5)[0]
+
+
 def test_chunk_reservation_capped_at_remaining_work(harness):
-    """REGRESSION: step() must reserve pages for the slot's REMAINING work,
-    not the whole prefill_chunk — a fitting request (1 page of real work)
-    with chunk 8 on a 1-page pool must complete, not raise pool-exhausted.
-    The chunk overshoot lands on the null page and is discarded."""
+    """REGRESSION: the scheduler must reserve pages for the slot's
+    REMAINING work, not the whole prefill_chunk — a fitting request
+    (1 page of real work) with chunk 8 on a 1-page pool must complete,
+    not raise pool-exhausted.  The chunk overshoot lands on the null page
+    and is discarded."""
     model, params, oracle = harness
     sc = ServeConfig(max_batch=1, max_seq=16, max_new_tokens=1, page_size=4,
                      num_pages=2, prefill_chunk=8)   # 1 allocatable page
@@ -231,9 +453,16 @@ def test_paged_rejects_ssm():
         PagedEngine(model, None, ServeConfig(max_batch=2, max_seq=32))
 
 
+def test_scheduler_rejects_unknown_fairness(harness):
+    model, params, _ = harness
+    with pytest.raises(ValueError, match="fairness"):
+        PagedEngine(model, params,
+                    ServeConfig(max_batch=1, max_seq=16, fairness="lifo"))
+
+
 def test_defrag_compacts_to_prefix(harness):
     """After defrag the live pages occupy the contiguous pool prefix and
-    the free list is exactly the tail."""
+    the free list is exactly the tail (shared pages counted once)."""
     model, params, _ = harness
     sc = ServeConfig(max_batch=3, max_seq=32, max_new_tokens=5, page_size=2,
                      prefill_chunk=2)
@@ -248,8 +477,8 @@ def test_defrag_compacts_to_prefix(harness):
     pe.defrag()
     pe.kv.check()
     live = pe.kv.live_pages
-    owned = sorted(p for o in pe.kv.owned for p in o)
-    assert owned == list(range(1, live + 1))
+    distinct = sorted({p for o in pe.kv.owned for p in o})
+    assert distinct == list(range(1, live + 1))
     assert sorted(pe.kv.free) == list(range(live + 1, pe.kv.num_pages))
     res = pe.run()                               # still drains correctly
     assert len(res) == 5
