@@ -32,7 +32,7 @@ def _large_hlo_text() -> str:
     return lowered.compile().as_text()
 
 
-def bench() -> List[str]:
+def stats() -> dict:
     from repro.core.hlo_counters import census_from_text
     text = _large_hlo_text()
     census_from_text(text)                       # warm (regex caches)
@@ -42,11 +42,50 @@ def bench() -> List[str]:
         census = census_from_text(text)
     dt = (time.perf_counter() - t0) / reps
     n_lines = text.count("\n")
-    return [f"hlo_census/decode_many-{n_lines}l,{dt*1e6:.0f},"
-            f"insts={census.total_instructions:.0f},"
-            f"lines_per_s={n_lines/dt:.0f}"]
+    return {"s_per_census": dt, "lines": float(n_lines),
+            "instructions": float(census.total_instructions),
+            "lines_per_s": n_lines / dt}
+
+
+def _line(s: dict) -> str:
+    return (f"hlo_census/decode_many-{s['lines']:.0f}l,"
+            f"{s['s_per_census']*1e6:.0f},"
+            f"insts={s['instructions']:.0f},"
+            f"lines_per_s={s['lines_per_s']:.0f}")
+
+
+def bench() -> List[str]:
+    return [_line(stats())]
+
+
+def main() -> int:
+    import argparse
+    import json
+    import os
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="merge a 'census' section into BENCH_serve.json "
+                         "so scripts/verify.sh gates census throughput "
+                         "alongside the serving floors")
+    args = ap.parse_args()
+    s = stats()
+    print(_line(s))
+    if args.json:
+        path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                            "BENCH_serve.json"))
+        record = {}
+        try:
+            with open(path) as f:
+                record = json.load(f)
+        except (OSError, ValueError):
+            pass
+        record["census"] = s
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[census_bench] wrote {path}")
+    return 0
 
 
 if __name__ == "__main__":
-    for line in bench():
-        print(line)
+    import sys
+    sys.exit(main())

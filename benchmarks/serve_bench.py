@@ -1,7 +1,7 @@
 """Serving micro-benchmark: batched decode throughput at smoke scale (the
 decode_32k cells' runnable counterpart).
 
-Three scenarios (``--scenario smoke|ragged|shared-prefix|all``):
+Four scenarios (``--scenario smoke|ragged|shared-prefix|long-decode|all``):
 
   * smoke — the fused device-resident ``decode_many`` loop against the
     legacy per-token host loop (both with donated caches), plus the paged
@@ -25,6 +25,15 @@ Three scenarios (``--scenario smoke|ragged|shared-prefix|all``):
     sharing disabled at EQUAL pool size, recording tokens/s and the
     logical-vs-physical token ratio (tokens resident by reference /
     tokens physically written) plus copy-on-write page-copy counts.
+  * long-decode — few slots, LONG generations: the workload where per-tick
+    host overhead (table re-uploads, forced-array builds, dispatch count)
+    dominates if the tick is fat.  Measures end-to-end tokens/s plus the
+    TICK_OVERHEAD metrics the instruction roofline cannot see — host ms
+    per tick, device dispatches per tick, and bytes uploaded per tick —
+    from the engine's per-tick traces (pool-walk traces disabled so the
+    tick is the thin production tick).  A steady-state decode tick must
+    run 1 dispatch and upload only the B-int feed/grant vectors: zero
+    table bytes, zero forced-token bytes.
 
 ``--json`` writes BENCH_serve.json so the perf trajectory is tracked across
 PRs (scripts/verify.sh gates on it).
@@ -56,6 +65,13 @@ RAGGED = dict(arch="granite-8b", batch=4, max_seq=192, requests=12,
 SHARED = dict(arch="granite-8b", batch=4, max_seq=96, requests=12,
               sys_prompt=48, tail_lo=4, tail_hi=12, out_lo=4, out_hi=10,
               page_size=16, prefill_chunk=4)
+# few slots x long generations: ~90% of ticks are pure decode (no
+# admission, no prompt in flight, no page-boundary crossing), so the
+# device-resident table state and the forced-free twin cell show their
+# largest win here — and the tick_overhead metrics are dominated by the
+# steady-state tick the optimizations target
+LONG_DECODE = dict(arch="granite-8b", batch=2, max_seq=256, requests=4,
+                   prompt=8, out=96, page_size=16, prefill_chunk=8)
 
 
 def _model(arch):
@@ -83,17 +99,28 @@ def run() -> Dict[str, float]:
                                  max_new_tokens=8, prefill_chunk=8,
                                  prefix_sharing=False))
     rng = np.random.RandomState(0)
-    for _ in range(2 * SMOKE["batch"]):
-        pe.submit(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32))
-    pe.step()                                    # compile
-    # the warm tick already emitted some output tokens: count only tokens
-    # produced inside the timed window (tokens_out delta, kept tokens)
-    tok0 = pe.tokens_out
-    t0 = time.perf_counter()
+    # warm drive to completion: compiles BOTH decode cells (forced-prefill
+    # and the pure-decode twin) before timing (the dirty-row patcher is
+    # pre-warmed by the engine itself)
+    pe.submit(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32))
     pe.run()
-    dt = time.perf_counter() - t0
-    stats["continuous_tokens_per_s"] = (pe.tokens_out - tok0) / max(dt, 1e-9)
-    stats["continuous_joins"] = float(pe.joins)
+
+    # best of two timed waves (same treatment as the ragged/shared
+    # drives): single ~20ms waves swing >2x under container contention
+    def wave():
+        tok0, joins0 = pe.tokens_out, pe.joins
+        for _ in range(2 * SMOKE["batch"]):
+            pe.submit(rng.randint(0, cfg.vocab_size,
+                                  size=6).astype(np.int32))
+        t0 = time.perf_counter()
+        pe.run()
+        dt = time.perf_counter() - t0
+        return (pe.tokens_out - tok0) / max(dt, 1e-9), \
+            float(pe.joins - joins0)
+
+    tps, joins = max(wave() for _ in range(2))
+    stats["continuous_tokens_per_s"] = tps
+    stats["continuous_joins"] = joins
     return stats
 
 
@@ -119,6 +146,17 @@ def _drive(engine, reqs, defrag_every: int = 0) -> Dict[str, float]:
     occ = engine.occupancy_trace[ticks0:]
     appended = engine.tokens_appended - appended0
     shared = engine.shared_tokens - shared0
+    # tick-overhead traces for THIS drive's ticks (the full traces index
+    # by tick, matching steps_run, whether or not pool traces are on)
+    host_ms = engine.host_ms_trace[ticks0:]
+    disp = engine.dispatch_trace[ticks0:]
+    upload = engine.upload_trace[ticks0:]
+    # a STEADY tick is one dispatch AND only the irreducible B-int
+    # feed/grant upload — a forced-prefill tick can also run one dispatch
+    # but carries (chunk, B) forced arrays, so classify on both
+    base_upload = 2 * engine.cfg.max_batch * 4
+    steady = [i for i, (d, u) in enumerate(zip(disp, upload))
+              if d == 1 and u == base_upload]
     return {"tokens": float(n_tok), "seconds": dt,
             "tokens_per_s": n_tok / max(dt, 1e-9),
             "joins": float(engine.joins - joins0),
@@ -128,7 +166,13 @@ def _drive(engine, reqs, defrag_every: int = 0) -> Dict[str, float]:
             "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             "cow_copies": float(engine.kv.cow_copies - cow0),
             "shared_tokens": float(shared),
-            "logical_physical_ratio": (appended + shared) / max(1, appended)}
+            "logical_physical_ratio": (appended + shared) / max(1, appended),
+            "ticks": float(len(disp)),
+            "host_ms_per_tick": float(np.mean(host_ms)) if host_ms else 0.0,
+            "dispatches_per_tick": float(np.mean(disp)) if disp else 0.0,
+            "upload_bytes_per_tick": float(np.mean(upload)) if upload
+            else 0.0,
+            "steady_ticks_frac": len(steady) / max(1, len(disp))}
 
 
 def _drive_dense_lockstep(model, params, reqs, batch: int,
@@ -248,6 +292,39 @@ def run_ragged() -> Dict[str, float]:
     }
 
 
+def run_long_decode() -> Dict[str, float]:
+    """Long-decode serving: few slots, long generations — the tick-
+    overhead showcase.  Tokens/s plus per-tick host cost, dispatch count
+    and upload bytes from the engine traces (pool-walk traces off: this
+    is the thin production tick)."""
+    from repro.serve.engine import PagedEngine, ServeConfig
+    L = LONG_DECODE
+    cfg, model, params = _model(L["arch"])
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, cfg.vocab_size,
+                         size=L["prompt"]).astype(np.int32), L["out"])
+            for _ in range(L["requests"])]
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+    pe = PagedEngine(
+        model, params, ServeConfig(max_batch=L["batch"],
+                                   max_seq=L["max_seq"],
+                                   page_size=L["page_size"],
+                                   prefill_chunk=L["prefill_chunk"],
+                                   trace_pool=False))
+    _drive(pe, warm)                                 # compile both cells
+    p = max((_drive(pe, reqs) for _ in range(2)),
+            key=lambda s: s["tokens_per_s"])
+    return {
+        "long_decode_tokens": p["tokens"],
+        "long_decode_tokens_per_s": p["tokens_per_s"],
+        "long_decode_ticks": p["ticks"],
+        "tick_host_ms": p["host_ms_per_tick"],
+        "tick_dispatches": p["dispatches_per_tick"],
+        "tick_upload_bytes": p["upload_bytes_per_tick"],
+        "tick_steady_frac": p["steady_ticks_frac"],
+    }
+
+
 def _shared_requests(cfg, rng) -> List:
     s = SHARED
     sys_prompt = rng.randint(0, cfg.vocab_size,
@@ -322,6 +399,16 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"mean={stats['ragged_page_util_mean']:.2f}"
             f"/max={stats['ragged_page_util_max']:.2f}",
         ]
+    if "long_decode_tokens_per_s" in stats:
+        lines += [
+            f"serve/long-decode,0,"
+            f"tokens_per_s={stats['long_decode_tokens_per_s']:.1f}",
+            f"serve/tick-overhead,{stats['tick_host_ms']*1e3:.0f},"
+            f"host_ms={stats['tick_host_ms']:.3f}"
+            f"/dispatches={stats['tick_dispatches']:.2f}"
+            f"/upload_B={stats['tick_upload_bytes']:.0f}",
+            f"serve/tick-steady,0,frac={stats['tick_steady_frac']:.2f}",
+        ]
     if "shared_tokens_per_s" in stats:
         lines += [
             f"serve/shared-prefix,0,"
@@ -340,6 +427,7 @@ def bench() -> List[str]:
     stats = run()
     stats.update(run_ragged())
     stats.update(run_shared())
+    stats.update(run_long_decode())
     return bench_lines_from(stats)
 
 
@@ -348,11 +436,14 @@ def main() -> int:
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_serve.json next to the repo root")
     ap.add_argument("--scenario",
-                    choices=("smoke", "ragged", "shared-prefix", "all"),
+                    choices=("smoke", "ragged", "shared-prefix",
+                             "long-decode", "all"),
                     default="all",
                     help="smoke: fused-vs-loop decode; ragged: paged vs "
                          "dense waves under mixed lengths; shared-prefix: "
-                         "prefix sharing vs no sharing at equal pool")
+                         "prefix sharing vs no sharing at equal pool; "
+                         "long-decode: few slots x long generations with "
+                         "per-tick host-overhead metrics")
     args = ap.parse_args()
     stats: Dict[str, float] = {}
     if args.scenario in ("smoke", "all"):
@@ -361,6 +452,8 @@ def main() -> int:
         stats.update(run_ragged())
     if args.scenario in ("shared-prefix", "all"):
         stats.update(run_shared())
+    if args.scenario in ("long-decode", "all"):
+        stats.update(run_long_decode())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
@@ -392,7 +485,15 @@ def main() -> int:
         if args.scenario in ("shared-prefix", "all"):
             record["shared_prefix"] = dict(
                 config=SHARED,
-                **{k: stats[k] for k in stats if k.startswith("shared_")})
+                **{k: stats[k] for k in stats
+                   if k.startswith("shared_")})
+        if args.scenario in ("long-decode", "all"):
+            record["long_decode"] = dict(
+                config=LONG_DECODE,
+                **{k: stats[k] for k in stats
+                   if k.startswith("long_decode_")})
+            record["tick_overhead"] = {
+                k: stats[k] for k in stats if k.startswith("tick_")}
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

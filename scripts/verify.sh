@@ -22,6 +22,10 @@ echo "[verify] CPU smoke serve_bench (all scenarios)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/serve_bench.py --json --scenario all
 
+echo "[verify] HLO census throughput"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/census_bench.py --json
+
 echo "[verify] tokens/s regression check (tolerance ${TOL})"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - "$TOL" <<'EOF'
 import json
@@ -52,6 +56,17 @@ GATED = [
     "ragged.ragged_paged_speedup",
     "shared_prefix.shared_tokens_per_s",
     "shared_prefix.shared_logical_physical_ratio",
+    "long_decode.long_decode_tokens_per_s",
+    "census.lines_per_s",
+]
+# per-tick overheads must not climb above ceiling x committed — the
+# tick_overhead section is a CEILING gate, not a floor.  Dispatch count
+# and upload bytes are schedule-deterministic (tight ceiling); host ms is
+# wall clock under container contention (wide ceiling: catches collapses)
+GATED_CEIL = [
+    ("tick_overhead.tick_dispatches", 1.0 + tol),
+    ("tick_overhead.tick_upload_bytes", 1.0 + tol),
+    ("tick_overhead.tick_host_ms", 1.0 + 4 * tol),
 ]
 failed = []
 for key in GATED:
@@ -65,6 +80,17 @@ for key in GATED:
           f"(floor {floor:.2f})")
     if n < floor:
         failed.append(key)
+for key, factor in GATED_CEIL:
+    b, n = get(base, key), get(new, key)
+    if b is None or n is None:
+        print(f"  [skip] {key}: missing ({'baseline' if b is None else 'new'})")
+        continue
+    ceil = factor * b
+    status = "ok" if n <= ceil else "REGRESSION"
+    print(f"  [{status}] {key}: {n:.2f} vs committed {b:.2f} "
+          f"(ceiling {ceil:.2f})")
+    if n > ceil:
+        failed.append(key)
 
 # hard floors independent of the committed record (acceptance criteria)
 ratio = get(new, "shared_prefix.shared_logical_physical_ratio")
@@ -77,6 +103,14 @@ if spd is not None and spd <= 1.0:
     print(f"  [REGRESSION] shared-prefix speedup {spd:.2f} <= 1.0 "
           f"(sharing must beat unshared at equal pool)")
     failed.append("shared_prefix_speedup_floor")
+# a healthy long-decode drive is mostly STEADY ticks (1 dispatch, only
+# the B-int feed/grant upload — zero table bytes, zero forced bytes);
+# reintroducing any per-tick upload would drop this fraction to 0
+sf = get(new, "tick_overhead.tick_steady_frac")
+if sf is not None and sf < 0.25:
+    print(f"  [REGRESSION] steady-tick fraction {sf:.2f} < 0.25 "
+          f"(long-decode ticks are paying per-tick uploads/dispatches)")
+    failed.append("steady_tick_frac_floor")
 
 if failed:
     print(f"[verify] FAILED: {failed}")

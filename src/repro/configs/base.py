@@ -56,6 +56,9 @@ class ArchConfig:
     tie_embeddings: bool = False
     # --- implementation switches (hillclimb levers) -----------------------------
     attention_impl: str = "reference"     # reference | pallas
+    pages_per_step: int = 1          # paged decode kernel: pages swept per
+                                     # grid step (page-list blocking; cuts
+                                     # grid steps by P for long slots)
     attn_chunk_q: int = 1024
     attn_chunk_kv: int = 1024
     ssm_chunk: int = 256

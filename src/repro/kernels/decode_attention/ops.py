@@ -34,11 +34,14 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_table: jax.Array,
                            kv_len: jax.Array, layer=0,
+                           pages_per_step: int = 1,
                            interpret: Optional[bool] = None) -> jax.Array:
     """q (B, 1, H, D); k_pool, v_pool (L, num_pages, page, KV, D) stacked
     pools (4D single-layer accepted); block_table (B, max_blocks) int32
     (page 0 = reserved null page); kv_len (B,) int32 per-slot token counts;
-    layer — pool layer to address.  Returns (B, 1, H, D)."""
+    layer — pool layer to address; pages_per_step — page-list blocking
+    factor (P pages swept per grid step).  Returns (B, 1, H, D)."""
     return _paged.paged_decode_attention_fwd(
         q, k_pool, v_pool, block_table, kv_len, layer,
+        pages_per_step=pages_per_step,
         interpret=_auto_interpret(interpret))

@@ -30,6 +30,18 @@ def main() -> int:
                     help="disable prompt-prefix page sharing on admission")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=4)
+    ap.add_argument("--pages-per-step", type=int, default=1,
+                    help="paged decode kernel page-list blocking: pages "
+                         "swept per grid step (cuts grid steps by P for "
+                         "long slots; only meaningful with the pallas "
+                         "attention impl)")
+    ap.add_argument("--sys-prompt-tokens", type=int, default=16,
+                    help="shared system-prompt length for the demo "
+                         "workload; keep it a MULTIPLE of --page-size — a "
+                         "page-aligned shared prefix needs zero "
+                         "copy-on-write (every shared page is full), a "
+                         "mid-page prefix copies one page per sharer "
+                         "(measured ~15%% tokens/s on the smoke config)")
     args = ap.parse_args()
     if args.legacy_loop and not args.whole_batch:
         ap.error("--legacy-loop only applies to --whole-batch generation "
@@ -43,12 +55,24 @@ def main() -> int:
     cfg = configs.get(args.arch)
     if args.local_smoke:
         cfg = cfg.reduced()
+    if args.pages_per_step != 1:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, pages_per_step=args.pages_per_step)
+    if args.sys_prompt_tokens % args.page_size:
+        print(f"[launch.serve] NOTE: sys prompt ({args.sys_prompt_tokens} "
+              f"tokens) is not page-aligned (page {args.page_size}) — every "
+              f"sharer will copy-on-write the partial trailing page; align "
+              f"shared system prompts to the page size for zero-copy "
+              f"sharing")
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
     # 2x batch requests of (prompt<=16 + new_tokens) tokens each; the paged
     # engine recycles pages across requests so max_seq only bounds ONE
     # request's span, not the engine's lifetime
-    max_seq = max(64, 16 + args.new_tokens + 16)
+    # worst-case request span: prompt (sys + tail <= 8) + the largest
+    # staggered budget (new_tokens + 2*(batch-1)) + chunk-overshoot margin
+    max_seq = max(64, args.sys_prompt_tokens + 8 + args.new_tokens
+                  + 2 * (args.batch - 1) + 16)
     scfg = ServeConfig(max_batch=args.batch, max_seq=max_seq,
                        max_new_tokens=args.new_tokens,
                        temperature=args.temperature,
@@ -70,12 +94,18 @@ def main() -> int:
         return 0
 
     engine = PagedEngine(model, params, scfg)
-    # shared system prompt + per-request tail: the prefix-sharing showcase
-    sys_prompt = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
-    rids = [engine.submit(np.concatenate(
-        [sys_prompt,
-         rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)
-                     ).astype(np.int32)])) for _ in range(2 * args.batch)]
+    # shared system prompt + per-request tail: the prefix-sharing showcase.
+    # Budgets are STAGGERED so early slots outlive late admissions — a
+    # joiner only shares pages while a donor is still resident
+    sys_prompt = rng.randint(0, cfg.vocab_size,
+                             size=args.sys_prompt_tokens).astype(np.int32)
+    rids = [engine.submit(
+        np.concatenate(
+            [sys_prompt,
+             rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)
+                         ).astype(np.int32)]),
+        max_new_tokens=args.new_tokens + (i % args.batch) * 2)
+        for i in range(2 * args.batch)]
     results = engine.run()
     util = engine.util_trace
     print(f"[launch.serve] paged: {len(results)} requests, "

@@ -187,13 +187,16 @@ class Model:
         serving path is one module family ``core.hlo_counters`` can census.
 
         tokens (B, 1) int32 — each slot's last emitted token.
-        active — (num_steps, B) bool PER-STEP mask (a (B,) mask is
-        broadcast to every step): the tick scheduler packs partial chunks
-        by activating a slot for only its granted prefix of the tick's
-        steps.  An inactive slot writes only the null page, does not
-        advance its length, and its token stream is FROZEN (the carry
-        re-emits its last token) so the host reads a stable value at the
-        slot's final active step regardless of later steps.
+        active — the per-step activity plan, in one of three forms: a
+        (num_steps, B) bool PER-STEP mask; a (B,) bool mask broadcast to
+        every step; or a (B,) INTEGER grant vector ``steps`` (slot ``i``
+        active for the first ``steps[i]`` steps of the chunk — the tick
+        scheduler's native form, expanded to the mask ON DEVICE so the
+        host uploads B ints instead of num_steps x B bools every tick).
+        An inactive slot writes only the null page, does not advance its
+        length, and its token stream is FROZEN (the carry re-emits its
+        last token) so the host reads a stable value at the slot's final
+        active step regardless of later steps.
         forced_tok / forced_mask (num_steps, B) — where the mask is set the
         emitted token is OVERRIDDEN by forced_tok (prompt feeding: chunked
         prefill routes prompt tokens through the decode cell); None means
@@ -208,7 +211,11 @@ class Model:
             forced_tok = jnp.zeros((num_steps, B), jnp.int32)
             forced_mask = jnp.zeros((num_steps, B), bool)
         active = jnp.asarray(active)
-        if active.ndim == 1:
+        if active.dtype != jnp.bool_:
+            # (B,) per-slot step grants -> per-step mask, built on device
+            active = (jnp.arange(num_steps, dtype=active.dtype)[:, None]
+                      < active[None, :])
+        elif active.ndim == 1:
             active = jnp.broadcast_to(active[None], (num_steps, B))
 
         def step(carry, xs):

@@ -293,7 +293,8 @@ def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     kv_len = lengths + 1
     if cfg.attention_impl == "pallas":
         from repro.kernels.decode_attention.ops import paged_decode_attention
-        out = paged_decode_attention(q, k_pool, v_pool, table, kv_len, layer)
+        out = paged_decode_attention(q, k_pool, v_pool, table, kv_len, layer,
+                                     pages_per_step=cfg.pages_per_step)
     else:
         from repro.kernels.decode_attention.ref import (
             paged_decode_attention_ref)

@@ -16,9 +16,11 @@ rope positions are request-relative in the paged decode path, so the K/V
 rows for an identical token prefix are bit-identical across slots and the
 reference is exact, not approximate.  Pages referenced more than once are
 IMMUTABLE: before any slot may append into a page with refcount > 1 the
-engine calls ``cow()``, which copies the page to a freshly-allocated one
-(a donated device page copy whose bytes the HLO census accounts page-wise,
-standalone and in-fusion) and rewires only that slot's table entry.
+scheduler reserves a copy-on-write (``cow_reserve``: fresh page allocated,
+table rewired, copy queued) and the tick's reservations are flushed in ONE
+batched donated device dispatch (``cow_flush`` — a tick privatizing N pages
+issues one copy call whose census bytes are exactly N x page_bytes,
+standalone and in-fusion), rewiring only the writing slot's table entries.
 Eviction decrements refcounts; a page returns to the free list only when
 its refcount reaches zero, so evicting a sharer never frees a page another
 slot still references.
@@ -32,7 +34,7 @@ freed while referenced.
 from __future__ import annotations
 
 from collections import Counter
-from typing import List
+from typing import Iterable, List, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,7 +86,15 @@ class PagedKVCache:
             * self.k.shape[4] * self.k.dtype.itemsize
         self.cow_copies = 0
         self.cow_bytes = 0
+        self.cow_dispatches = 0          # device copy calls (1 per flush)
         self.shared_pages = 0            # share() page references handed out
+        # (dst, src) page pairs reserved by cow_reserve() awaiting the one
+        # batched device copy of the tick (cow_flush)
+        self._pending_cow: List[Tuple[int, int]] = []
+        # slot rows whose table/length changed since the engine last synced
+        # its device mirrors (admission, COW, eviction, defrag mark these;
+        # the engine uploads ONLY these rows, then clears the set)
+        self.dirty: Set[int] = set(range(max_batch))
 
     # -- allocation ----------------------------------------------------------
 
@@ -105,6 +115,7 @@ class PagedKVCache:
             self.refcount[pg] = 1
             self.table[i, len(self.owned[i])] = pg
             self.owned[i].append(pg)
+            self.dirty.add(i)
         return True
 
     def share(self, dst: int, donor: int, n_tokens: int) -> None:
@@ -124,30 +135,84 @@ class PagedKVCache:
         self.owned[dst] = list(pages)
         self.length[dst] = n_tokens
         self.shared_pages += need
+        self.dirty.add(dst)
 
-    def cow(self, i: int, blk: int) -> bool:
-        """Copy-on-write block ``blk`` of slot ``i``: if the page is shared
-        (refcount > 1), copy it to a fresh page (donated device page copy)
-        and rewire only this slot's table entry, leaving the original —
-        and every row another slot can see — untouched.  Returns False if
-        the free list is dry (the scheduler stalls the slot until eviction
-        frees a page).  No-op on exclusively-owned pages."""
+    def cow_reserve(self, i: int, blk: int) -> bool:
+        """Reserve a copy-on-write of block ``blk`` of slot ``i``: if the
+        page is shared (refcount > 1), allocate a fresh destination page,
+        rewire only this slot's table entry, and QUEUE the (dst, src) page
+        copy for the tick's single batched device dispatch (``cow_flush``).
+        All host bookkeeping (refcounts, tables, counters) happens here;
+        only the device copy is deferred — nothing reads or writes the
+        reserved pages until the flush lands, because the scheduler flushes
+        before the engine issues the tick's decode dispatch.  Returns False
+        if the free list is dry (the scheduler stalls the slot until
+        eviction frees a page).  No-op on exclusively-owned pages."""
         pg = self.owned[i][blk]
         if self.refcount[pg] <= 1:
             return True
         if not self.free:
             return False
         q = self.free.pop()
-        dst = jnp.asarray([q], jnp.int32)
-        src = jnp.asarray([pg], jnp.int32)
-        self.k, self.v = self._copy(self.k, self.v, dst, src)
+        self._pending_cow.append((q, pg))
         self.refcount[pg] -= 1
         self.refcount[q] = 1
         self.owned[i][blk] = q
         self.table[i, blk] = q
         self.cow_copies += 1
         self.cow_bytes += self.page_bytes
+        self.dirty.add(i)
         return True
+
+    def cow_flush(self) -> int:
+        """Privatize every page queued by ``cow_reserve`` in ONE donated
+        gather/scatter dispatch over both pools (the batched COW: a tick
+        that privatizes N pages costs one device call, not N).  The batch
+        is NOT padded — the device moves exactly pages_copied x page_bytes
+        (the census-pinned claim); the copy program compiles once per
+        distinct batch size, bounded by the pages a single tick can touch
+        (B x (ceil(chunk/page) + 1)); ``warm_copy`` pre-compiles the
+        common small sizes so typical flushes never compile mid-tick.
+        Returns the pages copied."""
+        if not self._pending_cow:
+            return 0
+        dst = jnp.asarray([d for d, _ in self._pending_cow], jnp.int32)
+        src = jnp.asarray([s for _, s in self._pending_cow], jnp.int32)
+        self.k, self.v = self._copy(self.k, self.v, dst, src)
+        n = len(self._pending_cow)
+        self._pending_cow.clear()
+        self.cow_dispatches += 1
+        return n
+
+    def cow_many(self, items: Iterable[Tuple[int, int]]) -> int:
+        """Batched copy-on-write: privatize ALL shared (slot, blk) pairs in
+        one device dispatch.  Pairs whose page is already exclusive are
+        skipped; a dry free list stops the batch at the first unservable
+        pair (pairs after it are NOT privatized).  Returns the number of
+        pages copied.  Convenience wrapper over the reserve/flush pair — a
+        caller that must react per pair (e.g. the tick scheduler clipping
+        a slot's grant when its COW cannot be served) calls
+        ``cow_reserve`` itself and flushes once at the end of the plan."""
+        for i, blk in items:
+            if not self.cow_reserve(i, blk):
+                break
+        return self.cow_flush()
+
+    def warm_copy(self, sizes: Tuple[int, ...] = (1, 2)) -> None:
+        """Pre-compile the batched page copy for the given batch sizes
+        (null-page self-copies: page 0 onto page 0) so the common COW
+        flush sizes never pay an XLA compile inside a serving tick.
+        Counters are untouched — this is not a COW."""
+        for n in sizes:
+            idx = jnp.zeros((n,), jnp.int32)
+            self.k, self.v = self._copy(self.k, self.v, idx, idx)
+
+    def cow(self, i: int, blk: int) -> bool:
+        """Single-page copy-on-write (reserve + immediate flush) — kept for
+        callers outside the tick scheduler's batched path."""
+        ok = self.cow_reserve(i, blk)
+        self.cow_flush()
+        return ok
 
     def shared_blocks(self, i: int, lo_tok: int, hi_tok: int) -> List[int]:
         """Block indices of slot ``i`` whose pages are shared (refcount > 1)
@@ -169,6 +234,7 @@ class PagedKVCache:
         self.owned[i] = []
         self.table[i, :] = 0
         self.length[i] = 0
+        self.dirty.add(i)
 
     # -- bookkeeping ----------------------------------------------------------
 
@@ -206,6 +272,7 @@ class PagedKVCache:
     def check(self) -> None:
         """Refcount/free-list/table invariants (cheap; the property harness
         calls this every fuzz step)."""
+        assert not self._pending_cow, "unflushed COW reservations"
         refs = Counter(p for o in self.owned for p in o)
         assert 0 not in refs, "null page referenced"
         for i, o in enumerate(self.owned):
@@ -230,6 +297,7 @@ class PagedKVCache:
         renumbered to the same new id.  Purely physical: logical contents
         are untouched, so engine output is bit-identical across defrags
         (property-tested)."""
+        self.cow_flush()                 # pending copies address OLD page ids
         mapping = {0: 0}
         perm = [0]                                    # new -> old; null stays
         for i in range(self.B):
@@ -249,3 +317,4 @@ class PagedKVCache:
         perm_dev = jnp.asarray(np.asarray(perm, np.int32))
         self.k = self._gather(self.k, perm_dev)
         self.v = self._gather(self.v, perm_dev)
+        self.dirty.update(range(self.B))     # every table renumbered

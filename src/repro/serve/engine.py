@@ -24,13 +24,24 @@ Two engines, one compiled-cell discipline (no recompiles, ever):
     CHUNK-PREFILLED through the same compiled cell (forced-token
     override), and a request admitted with a prompt prefix already
     resident in a live slot's pages SHARES those pages (refcount bump, no
-    recompute) — appends into a shared page copy-on-write privatize it
-    first.  A request can outlive ``max_seq`` total traffic (pages
-    recycle), mid-flight joins reuse the one compiled cell, and the decode
+    recompute; the donor is found through a rolling-hash prefix index, not
+    a linear LCP scan) — appends into a shared page copy-on-write
+    privatize it first, all of a tick's copies batched into ONE device
+    dispatch.  A request can outlive ``max_seq`` total traffic (pages
+    recycle), mid-flight joins reuse the compiled cells, and the decode
     kernel's transaction count scales with live tokens, not pool size —
     the engine's regression suite pins all three guarantees, migrated from
     the retired dense lockstep engine (its row-wraparound machinery is
     gone; per-slot pages make it unnecessary).
+
+    The TICK is host-side as thin as the kernel: exactly two compiled
+    cells (prefill-in-flight with forced-token arrays, pure decode
+    without — each compiled once), a device-resident block table / length
+    state patched only at DIRTY rows (a steady-state decode tick uploads
+    zero table bytes and runs one dispatch), per-slot step grants
+    uploaded as B ints, and per-tick host-cost traces (host ms,
+    dispatches, upload bytes) feeding BENCH_serve.json's tick_overhead
+    section.
 
 CPU-runnable end-to-end (examples/serve_demo.py); the same step functions are
 what launch/serve.py lowers for the production mesh.
@@ -70,6 +81,13 @@ class ServeConfig:
     share_min_tokens: int = 1         # smallest common prefix worth sharing
     fairness: str = "least-served"    # page-grant order ("slot-order": legacy)
     tick_budget: int = 0              # max fresh tokens per tick (0: uncapped)
+    trace_pool: bool = True           # record per-tick util/occupancy traces
+                                      # (host-side pool walks; benchmarks
+                                      # measuring the thin tick disable it)
+    trace_ticks: bool = True          # record per-tick host-ms/dispatch/
+                                      # upload traces (cheap scalars, but
+                                      # unbounded — a long-lived server
+                                      # disables them; counters stay on)
 
 
 @dataclasses.dataclass
@@ -283,6 +301,75 @@ def _lcp(a: List[int], b: List[int]) -> int:
     return n
 
 
+def _patch_rows(table, length, rows, t_rows, l_rows):
+    """Patch the device table/length mirrors at ``rows`` (donated, so the
+    update is in place — the upload cost is the DIRTY rows, never the whole
+    (B, max_blocks) table)."""
+    return table.at[rows].set(t_rows), length.at[rows].set(l_rows)
+
+
+_HASH_MUL = 1_000_003
+_HASH_MOD = (1 << 61) - 1
+
+
+class _PrefixIndex:
+    """Rolling-hash index over every live slot's token-history PREFIXES.
+
+    Admission donor lookup used to be an O(slots x prompt) LCP scan per
+    request; this index makes it O(matched prefix): each live slot
+    registers the rolling digest of history[:n] for every n (extended
+    incrementally, a few entries per appended token), and a lookup walks
+    the prompt's own rolling digest outward, stopping at the FIRST length
+    with no registered match — a prompt sharing nothing with any live slot
+    costs one probe, independent of its length.  Digest collisions are
+    survivable: the engine verifies the winning (slot, n) against the real
+    token history and falls back to the exact scan on a mismatch."""
+
+    def __init__(self):
+        self._map: Dict[tuple, set] = {}      # (n, digest) -> slot ids
+        self._keys: Dict[int, List[tuple]] = {}
+        self._digest: Dict[int, int] = {}
+        self._len: Dict[int, int] = {}
+
+    def add(self, slot: int, tokens) -> None:
+        """Extend slot's indexed history by ``tokens`` (incremental)."""
+        h = self._digest.get(slot, 0)
+        n = self._len.get(slot, 0)
+        keys = self._keys.setdefault(slot, [])
+        for t in tokens:
+            h = (h * _HASH_MUL + int(t) + 1) % _HASH_MOD
+            n += 1
+            key = (n, h)
+            self._map.setdefault(key, set()).add(slot)
+            keys.append(key)
+        self._digest[slot] = h
+        self._len[slot] = n
+
+    def drop(self, slot: int) -> None:
+        for key in self._keys.pop(slot, ()):
+            owners = self._map.get(key)
+            if owners is not None:
+                owners.discard(slot)
+                if not owners:
+                    del self._map[key]
+        self._digest.pop(slot, None)
+        self._len.pop(slot, None)
+
+    def lookup(self, prompt: List[int], cap: int):
+        """Longest n <= cap with a live slot whose indexed history starts
+        with prompt[:n]; returns (slot, n) or (-1, 0).  Walks outward and
+        stops at the first unmatched length (a slot matching n+1 tokens
+        also matches n, so no longer match can exist past a miss)."""
+        h, best, donor = 0, 0, -1
+        for n in range(1, cap + 1):
+            h = (h * _HASH_MUL + int(prompt[n - 1]) + 1) % _HASH_MOD
+            owners = self._map.get((n, h))
+            if not owners:
+                break
+            best, donor = n, next(iter(owners))
+        return donor, best
+
+
 class PagedEngine(_SlotQueueBase):
     """Non-lockstep continuous batching over the paged KV cache.
 
@@ -329,10 +416,50 @@ class PagedEngine(_SlotQueueBase):
         self._many = jax.jit(model.decode_many_paged,
                              static_argnames=("num_steps", "temperature"),
                              donate_argnums=(2, 3))   # cache + key
+        # the forced-token-free twin: pure-decode ticks (no prompt in
+        # flight) skip building and uploading the (chunk, B) forced
+        # arrays entirely — a second compiled cell, compiled once
+        self._many_plain = jax.jit(
+            lambda params, tok, cache, key, steps, *, num_steps,
+            temperature: model.decode_many_paged(
+                params, tok, cache, key, steps, None, None,
+                num_steps=num_steps, temperature=temperature),
+            static_argnames=("num_steps", "temperature"),
+            donate_argnums=(2, 3))
+        # dirty-row patcher for the device table/length mirrors
+        self._patch = jax.jit(_patch_rows, donate_argnums=(0, 1))
         self.kv = PagedKVCache(model, B, cfg.max_seq,
                                page_size=cfg.page_size,
                                max_blocks=cfg.max_blocks,
                                num_pages=cfg.num_pages)
+        # DEVICE-RESIDENT tick state: the block table and lengths live on
+        # device across ticks; the host patches only rows the cache marked
+        # dirty (admission/COW/eviction/defrag) instead of re-uploading the
+        # whole (B, max_blocks) table every tick
+        self._table_dev = jnp.zeros((B, self.kv.max_blocks), jnp.int32)
+        self._length_dev = jnp.zeros((B,), jnp.int32)
+        self.kv.dirty.clear()            # mirrors start in sync (all zero)
+        # pre-compile every power-of-two patch variant (dirty-row batches
+        # are pow2-padded) so a dirty-row sync never compiles mid-tick —
+        # log2(B)+1 tiny programs, warmed with zero-on-zero patches
+        n = 1
+        while True:
+            self._table_dev, self._length_dev = self._patch(
+                self._table_dev, self._length_dev,
+                jnp.zeros((n,), jnp.int32),
+                jnp.zeros((n, self.kv.max_blocks), jnp.int32),
+                jnp.zeros((n,), jnp.int32))
+            if n >= B:
+                break
+            n = min(2 * n, 1 << (B - 1).bit_length())
+        if cfg.prefix_sharing:
+            # pre-compile the COW flush for every batch size up to the
+            # per-tick bound (capped at 8; rarer, larger bursts compile
+            # lazily once) so a COW tick never pays an XLA compile
+            chunk = max(1, cfg.prefill_chunk)
+            bound = B * (-(-chunk // self.kv.page) + 1)
+            self.kv.warm_copy(tuple(range(1, min(bound, 8) + 1)))
+        self._pindex = _PrefixIndex()
         self.scheduler = TickScheduler(fairness=cfg.fairness,
                                        tick_budget=cfg.tick_budget)
         self.key = jax.random.key(cfg.seed)
@@ -349,22 +476,38 @@ class PagedEngine(_SlotQueueBase):
         self.stalls = 0
         self.util_trace: List[float] = []        # per-tick page utilization
         self.occupancy_trace: List[float] = []   # per-tick row occupancy
+        # --- tick-overhead accounting (the host side the roofline can't
+        # see: BENCH_serve.json's tick_overhead section reads these) ------
+        self.table_upload_bytes = 0       # dirty-row table/length patches
+        self.forced_upload_bytes = 0      # forced-token arrays (prefill)
+        self.upload_bytes = 0             # all per-tick host->device bytes
+        self.host_ms_trace: List[float] = []     # host work per tick (ms)
+        self.dispatch_trace: List[int] = []      # device calls per tick
+        self.upload_trace: List[int] = []        # bytes uploaded per tick
 
     # -- request lifecycle -----------------------------------------------------
 
     def _find_donor(self, prompt: List[int]):
-        """Longest-common-prefix match of ``prompt`` against every live
-        slot's resident token history.  Returns (slot index, shared token
-        count) — (-1, 0) when nothing clears ``share_min_tokens``.  The
-        cap at ``len(prompt) - 1`` keeps the last prompt token always fed
-        (its logits seed the first sampled output)."""
-        best, donor = 0, -1
-        for j, s in enumerate(self.slots):
-            if not s.active:
-                continue
-            n = min(_lcp(prompt, s.history), len(prompt) - 1)
-            if n > best:
-                best, donor = n, j
+        """Longest-common-prefix match of ``prompt`` against the live
+        slots' resident token histories via the rolling-hash prefix index
+        (O(matched prefix), not O(slots x prompt)).  Returns (slot index,
+        shared token count) — (-1, 0) when nothing clears
+        ``share_min_tokens``.  The cap at ``len(prompt) - 1`` keeps the
+        last prompt token always fed (its logits seed the first sampled
+        output)."""
+        cap = len(prompt) - 1
+        donor, best = self._pindex.lookup(prompt, cap)
+        if donor >= 0 and not (self.slots[donor].active
+                               and self.slots[donor].history[:best]
+                               == prompt[:best]):
+            # digest collision (or index drift): exact-scan fallback
+            best, donor = 0, -1
+            for j, s in enumerate(self.slots):
+                if not s.active:
+                    continue
+                n = min(_lcp(prompt, s.history), cap)
+                if n > best:
+                    best, donor = n, j
         if best < max(1, self.cfg.share_min_tokens):
             return -1, 0
         return donor, best
@@ -383,14 +526,16 @@ class PagedEngine(_SlotQueueBase):
             if donor >= 0:
                 self.kv.share(i, donor, n_shared)
                 self.shared_tokens += n_shared
-            else:
-                self.kv.length[i] = 0
+            # no donor: the slot's length row is already 0 (free_slot
+            # zeroed and dirty-marked it; a fresh engine starts at 0)
             # best-effort first page; a dry pool stalls (not deadlocks):
             # the scheduler re-tries every tick as evictions refill the list
             self.kv.ensure(i, n_shared + 1)
             self.slots[i] = _Slot(rid=req.rid, forced=prompt[n_shared + 1:],
                                   out=[], history=prompt[:n_shared],
                                   budget=req.max_new_tokens, active=True)
+            if self.cfg.prefix_sharing:
+                self._pindex.add(i, prompt[:n_shared])
             self._feed[i] = prompt[n_shared]
             self.joins += 1
 
@@ -399,6 +544,7 @@ class PagedEngine(_SlotQueueBase):
         self.results[slot.rid] = slot.out
         self.slots[i] = _Slot()
         self._feed[i] = self.cfg.pad_id
+        self._pindex.drop(i)
         self.kv.free_slot(i)              # drop the slot's page references
 
     # -- stepping ---------------------------------------------------------------
@@ -407,12 +553,23 @@ class PagedEngine(_SlotQueueBase):
         self.kv.defrag()
 
     def step(self) -> None:
-        """One engine tick: admit, plan (partial grants / COW / fairness),
+        """One engine tick: admit, plan (partial grants / batched COW /
+        fairness), sync the dirty rows of the device-resident table state,
         then advance every granted slot by its planned steps through the
-        one fused cell."""
+        fused cell.
+
+        The tick is kept as thin as the kernel: the tick's COW copies are
+        ONE batched dispatch (flushed inside ``plan``), the block table and
+        lengths live on device and only dirty rows are patched (a
+        steady-state decode tick uploads zero table bytes), the per-slot
+        grants go up as B ints (the per-step mask is built on device), and
+        a tick with no prompt in flight runs the forced-token-free twin
+        cell so no (chunk, B) forced arrays are built or uploaded."""
         cfg = self.cfg
         chunk = max(1, cfg.prefill_chunk)
+        t0 = time.perf_counter()
         self._admit()
+        cow_disp0 = self.kv.cow_dispatches
         plan = self.scheduler.plan(self.slots, self.kv, chunk)
         self.stalls += plan.stalled
         if not plan.any_work:
@@ -424,38 +581,77 @@ class PagedEngine(_SlotQueueBase):
             return
         B = len(self.slots)
         steps = plan.steps
+        dispatches = self.kv.cow_dispatches - cow_disp0   # batched COW: <= 1
+        tick_upload = 2 * B * 4               # feed tokens + step grants
 
-        forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
-        forced_mask = np.zeros((chunk, B), bool)
-        for i, slot in enumerate(self.slots):
-            for s in range(min(len(slot.forced), int(steps[i]))):
-                forced_tok[s, i] = slot.forced[s]
-                forced_mask[s, i] = True
+        # dirty-row sync of the device table/length mirrors: only rows
+        # admission/COW/eviction/defrag touched; nothing in steady state.
+        # The row batch is padded to a power of two (repeating the first
+        # dirty row — an idempotent scatter) so the patcher's compile
+        # universe is log2(B)-bounded, not one program per distinct count.
+        if self.kv.dirty:
+            rows = sorted(self.kv.dirty)
+            self.kv.dirty.clear()
+            pad = 1 << (len(rows) - 1).bit_length()
+            rows = np.asarray(rows + rows[:1] * (pad - len(rows)), np.int32)
+            self._table_dev, self._length_dev = self._patch(
+                self._table_dev, self._length_dev, jnp.asarray(rows),
+                jnp.asarray(self.kv.table[rows]),
+                jnp.asarray(self.kv.length[rows]))
+            row_bytes = int(rows.size) * (self.kv.max_blocks + 1) * 4
+            self.table_upload_bytes += row_bytes
+            tick_upload += row_bytes
+            dispatches += 1
 
         cache = {"k": self.kv.k, "v": self.kv.v,
-                 "table": jnp.asarray(self.kv.table),
-                 "length": jnp.asarray(self.kv.length)}
-        toks, cache, self.key = self._many(
-            self.params, jnp.asarray(self._feed)[:, None], cache, self.key,
-            jnp.asarray(plan.active), jnp.asarray(forced_tok),
-            jnp.asarray(forced_mask),
-            num_steps=chunk, temperature=cfg.temperature)
+                 "table": self._table_dev, "length": self._length_dev}
+        feed = jnp.asarray(self._feed)[:, None]
+        steps_dev = jnp.asarray(steps)
+        prompt_in_flight = any(s.active and s.forced and steps[i]
+                               for i, s in enumerate(self.slots))
+        if prompt_in_flight:
+            forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
+            forced_mask = np.zeros((chunk, B), bool)
+            for i, slot in enumerate(self.slots):
+                for s in range(min(len(slot.forced), int(steps[i]))):
+                    forced_tok[s, i] = slot.forced[s]
+                    forced_mask[s, i] = True
+            forced_bytes = chunk * B * (4 + 1)
+            self.forced_upload_bytes += forced_bytes
+            tick_upload += forced_bytes
+            toks, cache, self.key = self._many(
+                self.params, feed, cache, self.key, steps_dev,
+                jnp.asarray(forced_tok), jnp.asarray(forced_mask),
+                num_steps=chunk, temperature=cfg.temperature)
+        else:
+            toks, cache, self.key = self._many_plain(
+                self.params, feed, cache, self.key, steps_dev,
+                num_steps=chunk, temperature=cfg.temperature)
+        dispatches += 1
         self.kv.k = cache["k"]
         self.kv.v = cache["v"]
-        self.kv.length += steps               # mirrors the device increment
+        self._table_dev = cache["table"]
+        self._length_dev = cache["length"]    # device already advanced it
+        self.kv.length += steps               # host mirror of the increment
         self.tokens_appended += int(steps.sum())
         self.steps_run += 1
-        self.util_trace.append(self.kv.utilization())
-        self.occupancy_trace.append(self.kv.occupancy())
+        if cfg.trace_pool:
+            self.util_trace.append(self.kv.utilization())
+            self.occupancy_trace.append(self.kv.occupancy())
 
-        toks_np = np.asarray(toks)            # (chunk, B)
+        t1 = time.perf_counter()
+        toks_np = np.asarray(toks)            # (chunk, B) — device wait
+        t2 = time.perf_counter()
         for i, slot in enumerate(self.slots):
             si = int(steps[i])
             if not slot.active or si == 0:
                 continue
             # tokens fed this tick = this tick's K/V rows (donor index)
-            slot.history.append(int(self._feed[i]))
-            slot.history.extend(int(toks_np[s, i]) for s in range(si - 1))
+            fed = [int(self._feed[i])] \
+                + [int(toks_np[s, i]) for s in range(si - 1)]
+            slot.history.extend(fed)
+            if cfg.prefix_sharing:          # the index only feeds donor
+                self._pindex.add(i, fed)    # lookup, gated the same way
             slot.served += si
             n_forced = min(len(slot.forced), si)
             del slot.forced[:n_forced]
@@ -473,6 +669,13 @@ class PagedEngine(_SlotQueueBase):
                 self._finish(i)
             else:
                 self._feed[i] = toks_np[si - 1, i]
+        t3 = time.perf_counter()
+        if cfg.trace_ticks:
+            # host cost of the tick = everything but the device wait
+            self.host_ms_trace.append(((t1 - t0) + (t3 - t2)) * 1e3)
+            self.dispatch_trace.append(dispatches)
+            self.upload_trace.append(tick_upload)
+        self.upload_bytes += tick_upload
 
     # -- bookkeeping -------------------------------------------------------------
 

@@ -16,7 +16,12 @@ its whole chunk's pages or sat out the tick — into packing:
   * COW PRIVATIZATION — before granting steps that would append into a
     page shared with another slot (refcount > 1), the shared block is
     copy-on-write privatized; if no page is free for the copy the grant is
-    clipped to the page boundary (never mutating a shared page);
+    clipped to the page boundary (never mutating a shared page).  The
+    copies are BATCHED: the per-slot loop only reserves
+    (``PagedKVCache.cow_reserve`` — host bookkeeping, fresh page, table
+    rewire) and the plan ends with ONE ``cow_flush`` device dispatch for
+    every page the tick privatizes, regardless of how many slots or
+    blocks are involved;
   * FAIRNESS (``cfg.fairness``) — page-grant order: ``"least-served"``
     gives pages to the slot with the fewest fresh tokens appended so far
     (a long prefill cannot starve late joiners), ``"slot-order"`` is the
@@ -41,11 +46,18 @@ from repro.serve.cache import PagedKVCache
 
 @dataclasses.dataclass
 class TickPlan:
-    """One tick's work assignment."""
+    """One tick's work assignment.  The engine uploads ``steps`` (B ints)
+    and the per-step mask is built ON DEVICE; ``active`` is derived lazily
+    for tests/introspection and never materialized on the tick path."""
     steps: np.ndarray          # (B,) int32 — fused steps granted per slot
-    active: np.ndarray         # (chunk, B) bool — per-step active mask
+    chunk: int                 # scan steps in the tick's fused cell
     stalled: int = 0           # active slots that wanted steps but got none
     cow_copies: int = 0        # pages privatized for this tick's appends
+
+    @property
+    def active(self) -> np.ndarray:
+        """(chunk, B) bool per-step active mask (derived from steps)."""
+        return np.arange(self.chunk)[:, None] < self.steps[None, :]
 
     @property
     def any_work(self) -> bool:
@@ -91,9 +103,11 @@ class TickScheduler:
             # free page, and ensure() extending the table could consume
             # the last one — COW-before-ensure lets the slot privatize
             # and advance within its existing pages instead of hoarding a
-            # fresh page it cannot write past (regression-tested)
+            # fresh page it cannot write past (regression-tested).  Only
+            # RESERVED here (host bookkeeping); the one batched device
+            # copy for every page the tick privatizes is flushed below.
             for b in kv.shared_blocks(i, length, length + want):
-                if kv.cow(i, b):
+                if kv.cow_reserve(i, b):
                     cows += 1
                 else:
                     # no page free for the copy: stop before the shared
@@ -109,6 +123,6 @@ class TickScheduler:
                 stalled += 1
             steps[i] = granted
             budget -= granted
-        active = np.arange(chunk)[:, None] < steps[None, :]
-        return TickPlan(steps=steps, active=active, stalled=stalled,
+        kv.cow_flush()                  # ONE device copy for the whole tick
+        return TickPlan(steps=steps, chunk=chunk, stalled=stalled,
                         cow_copies=cows)

@@ -173,6 +173,65 @@ def test_paged_decode_attention_matches_gather_oracle(B, H, KV, D, page,
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("NB,P,want", [
+    (5, 1, 5), (5, 2, 3), (5, 4, 2), (8, 4, 2), (3, 4, 1), (1, 4, 1),
+])
+def test_multipage_grid_arithmetic(NB, P, want):
+    """P pages per grid step -> ceil(NB / P) steps along the block axis,
+    table padded to steps * P with null-page entries."""
+    from repro.kernels.decode_attention.paged import grid_steps, padded_blocks
+    assert grid_steps(NB, P) == want == -(-NB // P)
+    assert padded_blocks(NB, P) == want * P
+    assert padded_blocks(NB, P) >= NB
+
+
+def test_multipage_kernel_runs_ceil_grid_steps(monkeypatch):
+    """The pages_per_step=4 kernel must RUN ceil(NB/4) grid steps per
+    (slot, kv-head) — asserted on the actual pallas grid, not just the
+    arithmetic helper."""
+    import repro.kernels.decode_attention.paged as paged_mod
+    recorded = {}
+    orig = paged_mod.pltpu.PrefetchScalarGridSpec
+
+    def spy(*args, **kwargs):
+        recorded["grid"] = kwargs.get("grid", args[1] if len(args) > 1
+                                      else None)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(paged_mod.pltpu, "PrefetchScalarGridSpec", spy)
+    B, H, KV, D, page, NB, L = 2, 4, 2, 16, 8, 5, 1
+    q, kp, vp, tbl, lens, layer = _paged_case(0, B, H, KV, D, page, NB, L)
+    for pps, steps in ((4, 2), (2, 3), (1, 5)):
+        paged_mod.paged_decode_attention_fwd(
+            q, kp, vp, tbl, lens, layer, pages_per_step=pps, interpret=True)
+        assert recorded["grid"] == (B, KV, steps), \
+            f"pages_per_step={pps}: grid {recorded['grid']}"
+
+
+@pytest.mark.parametrize("pps", [1, 2, 4])
+@pytest.mark.parametrize("B,H,KV,D,page,NB,L", [
+    (2, 4, 2, 16, 8, 5, 2),       # GQA group 2; 5 % 2 and 5 % 4 != 0
+    (3, 4, 1, 16, 8, 3, 1),       # MQA; NB < P at pps=4
+    (1, 8, 8, 32, 8, 4, 2),       # MHA; NB % pps == 0 at 2 and 4
+    (2, 6, 2, 32, 16, 2, 2),      # group 3; trailing partial page
+])
+def test_multipage_paged_decode_matches_oracle(pps, B, H, KV, D, page,
+                                               NB, L):
+    """Multi-page blocking sweeps P physically-scattered pages per grid
+    step through the online softmax; the output must match the jnp gather
+    oracle bit-for-fp32 across GQA groups, ragged lengths and page counts
+    not dividing kv_len OR pages_per_step."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    q, kp, vp, tbl, lens, layer = _paged_case(B + H + pps, B, H, KV, D,
+                                              page, NB, L)
+    got = paged_decode_attention(q, kp, vp, tbl, lens, layer,
+                                 pages_per_step=pps, interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, tbl, lens, layer)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_paged_oracle_matches_dense_on_packed_pages():
     """Oracle-of-oracle: hand-pack a contiguous (B, T, KV, D) cache into
     pages; the gather oracle must equal the dense direct attention with the
@@ -293,7 +352,9 @@ def test_paged_outlives_max_seq_token_identical():
 
 def test_paged_zero_recompiles(small_model):
     """The whole engine lifetime — admissions, mid-flight joins, stalls,
-    partial grants, evictions — reuses ONE compiled decode cell."""
+    partial grants, evictions — reuses the TWO compiled decode cells
+    (prefill-in-flight with forced arrays, pure decode without), each
+    compiled exactly once."""
     model, params = small_model
     pe = PagedEngine(model, params,
                      ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4,
@@ -307,19 +368,47 @@ def test_paged_zero_recompiles(small_model):
                               size=n).astype(np.int32))
     pe.run()
     assert pe._many._cache_size() == 1
+    assert pe._many_plain._cache_size() <= 1     # pure-decode twin
+
+
+def test_steady_state_tick_uploads_zero_table_bytes(small_model):
+    """REGRESSION (device-resident tick state): once a slot's prompt has
+    drained and no allocation/COW/admission happens, an engine tick must
+    upload ZERO table/length bytes and ZERO forced-token bytes — only the
+    B-int feed/grant vectors move, and the tick is exactly one device
+    dispatch (the fused decode cell)."""
+    model, params = small_model
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=2, max_seq=64, max_new_tokens=12,
+                                 page_size=32, prefill_chunk=2))
+    pe.submit(np.arange(1, 5, dtype=np.int32))       # 4-token prompt
+    while any(s.active and s.forced for s in pe.slots) or pe.queue:
+        pe.step()                 # drain admission + chunked prefill
+    pe.step()                     # settle residual dirty rows
+    tb0, fb0 = pe.table_upload_bytes, pe.forced_upload_bytes
+    d0 = pe.kv.cow_dispatches
+    pe.step()                     # a pure steady-state decode tick
+    assert pe.table_upload_bytes == tb0, "steady tick re-uploaded the table"
+    assert pe.forced_upload_bytes == fb0, "steady tick built forced arrays"
+    assert pe.kv.cow_dispatches == d0
+    assert pe.dispatch_trace[-1] == 1        # just the fused decode cell
+    assert pe.upload_trace[-1] == 2 * pe.cfg.max_batch * 4  # feed + grants
 
 
 # ---------------------------------------------------------------------------
 # paged engine: pallas path + fused-vs-stepwise + sampling discipline
 # ---------------------------------------------------------------------------
 
-def test_paged_pallas_path_token_identical(small_model):
+@pytest.mark.parametrize("pps", [1, 2])
+def test_paged_pallas_path_token_identical(small_model, pps):
     """Whole paged serving path with cfg.attention_impl='pallas' (paged
     kernel inside the layer scan inside decode_many_paged) vs the jnp
-    gather-oracle path."""
+    gather-oracle path — including the multi-page blocking mode, which
+    must be invisible in the tokens."""
     model, params = small_model
     model_pl = get_model(dataclasses.replace(model.cfg,
-                                             attention_impl="pallas"))
+                                             attention_impl="pallas",
+                                             pages_per_step=pps))
     sc = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=5, page_size=8,
                      prefill_chunk=3)
     prompts = _prompts(model, n=3)
@@ -516,10 +605,12 @@ def test_cow_page_copy_census_scales_with_pages(dtype):
     page_bytes = L * page * KV * hd * jnp.dtype(dtype).itemsize
     page_f32 = L * page * KV * hd * 4       # compute-dtype page (CPU widens)
     c2_small, c2_big = census(33, 2), census(65, 2)
-    c4 = census(65, 4)
+    c3, c4 = census(65, 3), census(65, 4)
     # pool-size independence: doubling the pool moves zero extra bytes
     assert c2_big.hbm_bytes == c2_small.hbm_bytes
-    # page scaling: doubling the pages copied doubles the traffic
+    # page scaling: the batched-COW claim — bytes == pages_copied x
+    # page_bytes regardless of the batch size the tick collected
+    assert c3.hbm_bytes == pytest.approx(1.5 * c2_big.hbm_bytes, rel=0.01)
     assert c4.hbm_bytes == pytest.approx(2 * c2_big.hbm_bytes, rel=0.01)
     assert c4.irregular_bytes == pytest.approx(2 * c2_big.irregular_bytes,
                                                rel=0.01)

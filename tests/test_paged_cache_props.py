@@ -32,6 +32,7 @@ decode_many per distinct budget).
 """
 import numpy as np
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.configs import get
@@ -52,6 +53,35 @@ def harness():
                            ServeConfig(max_batch=1, max_seq=64,
                                        max_new_tokens=max(BUDGETS)))
     return model, params, oracle
+
+
+def _assert_match_or_near_tie(model, params, prompt, got, want,
+                              tol=5e-3, label=""):
+    """Token comparison that is NEAR-TIE-AWARE instead of silently
+    accepting any divergence: identical outputs pass; on the first
+    differing token, the model's logits for that position are recomputed
+    (teacher-forced prefill of prompt + the oracle's tokens so far) and
+    BOTH candidate tokens must sit within ``tol`` of the max logit — the
+    genuine bf16 argmax near-tie the ragged workload is known to hit.  A
+    divergence with a real logit gap fails loudly.  Tokens after a
+    verified near-tie legitimately differ (the streams forked on a
+    coin-flip) and are not compared."""
+    got, want = list(got), list(want)
+    if got == want:
+        return
+    n = min(len(got), len(want))
+    t = next((i for i in range(n) if got[i] != want[i]), n)
+    assert t < n, (f"{label}: outputs agree token-wise but differ in "
+                   f"length ({len(got)} vs {len(want)}): {got} vs {want}")
+    ctx = np.asarray(list(prompt) + want[:t], np.int32)[None]
+    logits, _ = model.prefill(params, {"tokens": jnp.asarray(ctx)})
+    row = np.asarray(logits[0], np.float32)
+    top = float(row.max())
+    gap_got = top - float(row[got[t]])
+    gap_want = top - float(row[want[t]])
+    assert max(gap_got, gap_want) < tol, (
+        f"{label}: divergence at step {t} ({got[t]} vs {want[t]}) is NOT "
+        f"a near-tie: logit gaps {gap_got:.4f}/{gap_want:.4f} >= {tol}")
 
 
 def _check_tick(pe):
@@ -123,7 +153,11 @@ def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
                 b = int(rng.choice(BUDGETS))
                 submitted[pe.submit(p, b)] = (p, b)
         if pe.busy:
+            cow_disp0 = pe.kv.cow_dispatches
             pe.step()
+            # batched COW: however many pages a tick privatizes, it
+            # issues at most ONE copy dispatch
+            assert pe.kv.cow_dispatches - cow_disp0 <= 1
             _check_tick(pe)                   # refcounts, no leak, no drift
             if check_frozen:
                 _assert_shared_frozen(pe, shared_snap)
@@ -149,8 +183,12 @@ def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
     assert pe.joins == len(submitted)
     for rid, (p, b) in submitted.items():
         want = oracle.generate_batch([p], max_new_tokens=b)[0]
-        assert res[rid] == want, f"seed={seed} rid={rid}: paged output " \
-            f"diverged from the fresh dense-cache oracle"
+        # near-tie-aware: an exact match passes; a divergence is accepted
+        # ONLY if the logit gap at the forking token is a genuine bf16
+        # argmax near-tie (silently differing streams fail loudly)
+        _assert_match_or_near_tie(
+            model, params, p, res[rid], want,
+            label=f"seed={seed} rid={rid} (paged vs dense-cache oracle)")
     return {"ticks": pe.steps_run, "shared": pe.shared_tokens,
             "cow": pe.kv.cow_copies}
 
@@ -343,6 +381,87 @@ def test_scheduler_cow_before_ensure(harness):
     assert kv.cow_copies == 1                # the free page went to the COW
     assert int(plan.steps[0]) == 2           # advances within the new page
     assert plan.stalled == 0
+
+
+def test_cow_many_one_dispatch_refcount_fuzz(harness):
+    """Batched COW at the cache level: randomized share topologies, then
+    one ``cow_many`` over a random (slot, blk) set — N privatizations must
+    cost exactly ONE device dispatch, counters must track pages (bytes ==
+    copies x page_bytes), and the refcount/free-list/table invariants must
+    hold after every batch."""
+    from repro.serve.cache import PagedKVCache
+    model, params, _ = harness
+    for seed in range(4):
+        rng = np.random.RandomState(40 + seed)
+        kv = PagedKVCache(model, 4, 32, page_size=4, num_pages=40)
+        n_tok = int(rng.randint(8, 17))
+        assert kv.ensure(0, n_tok)
+        kv.length[0] = n_tok
+        for dst in (1, 2, 3):
+            kv.share(dst, 0, int(rng.randint(1, n_tok + 1)))
+        kv.check()
+        items = [(i, b) for i in range(4) for b in range(len(kv.owned[i]))
+                 if rng.rand() < 0.5]
+        d0, c0, b0 = kv.cow_dispatches, kv.cow_copies, kv.cow_bytes
+        # expected copies: each privatization drains one reference, and
+        # the LAST referent of a page keeps the original (no copy)
+        rc = kv.refcount.copy()
+        expected = 0
+        for i, b in items:
+            pg = kv.owned[i][b]
+            if rc[pg] > 1:
+                rc[pg] -= 1
+                expected += 1
+        copied = kv.cow_many(items)
+        assert copied == expected            # exclusive pages skipped
+        assert kv.cow_dispatches - d0 == (1 if copied else 0)
+        assert kv.cow_copies - c0 == copied
+        assert kv.cow_bytes - b0 == copied * kv.page_bytes
+        kv.check()
+
+
+def test_tick_batches_cow_into_one_dispatch(harness):
+    """Engine-level half of the batched-COW claim: a tick whose appends
+    privatize SEVERAL shared pages (two sharers forking off one donor in
+    the same tick) issues exactly ONE copy dispatch for all of them."""
+    model, params, oracle = harness
+    sc = ServeConfig(max_batch=3, max_seq=32, max_new_tokens=4, page_size=4,
+                     prefill_chunk=2)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(31)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=6).astype(np.int32)
+    rids = [pe.submit(prompt)]            # donor
+    pe.step()                             # donor resident mid-page
+    rids += [pe.submit(prompt), pe.submit(prompt)]
+    pe._admit()                           # both sharers reference the page
+    shared = [p for p in range(1, pe.kv.num_pages) if pe.kv.refcount[p] > 1]
+    assert shared and pe.kv.refcount[shared[0]] == 3
+    d0, c0 = pe.kv.cow_dispatches, pe.kv.cow_copies
+    pe.step()                             # both sharers append -> 2 COWs
+    assert pe.kv.cow_copies - c0 == 2, "tick should privatize two pages"
+    assert pe.kv.cow_dispatches - d0 == 1, \
+        "N privatizations in one tick must be ONE copy dispatch"
+    res = pe.run()                        # outputs stay oracle-identical
+    want = oracle.generate_batch([prompt], max_new_tokens=4)[0]
+    for rid in rids:
+        assert res[rid] == want
+
+
+def test_near_tie_helper_rejects_real_divergence(harness):
+    """The near-tie-aware comparison must NOT silently accept arbitrary
+    divergence: a token swap with a real logit gap fails, an exact match
+    passes."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(77)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=5).astype(np.int32)
+    want = oracle.generate_batch([prompt], max_new_tokens=4)[0]
+    _assert_match_or_near_tie(model, params, prompt, want, want)  # passes
+    # greedy argmax vs the runner-up is a REAL gap on this seed: flipping
+    # the first token must be rejected (if it ever ties, tighten tol)
+    forged = [(want[0] + 1) % model.cfg.vocab_size] + want[1:]
+    with pytest.raises(AssertionError, match="NOT a near-tie"):
+        _assert_match_or_near_tie(model, params, prompt, forged, want,
+                                  tol=1e-6)
 
 
 def test_cow_preserves_shared_rows(harness):
