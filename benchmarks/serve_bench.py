@@ -1,7 +1,8 @@
 """Serving micro-benchmark: batched decode throughput at smoke scale (the
 decode_32k cells' runnable counterpart).
 
-Four scenarios (``--scenario smoke|ragged|shared-prefix|long-decode|all``):
+Scenarios
+(``--scenario smoke|ragged|shared-prefix|long-decode|long-prompt|all``):
 
   * smoke — the fused device-resident ``decode_many`` loop against the
     legacy per-token host loop (both with donated caches), plus the paged
@@ -34,6 +35,14 @@ Four scenarios (``--scenario smoke|ragged|shared-prefix|long-decode|all``):
     tick is the thin production tick).  A steady-state decode tick must
     run 1 dispatch and upload only the B-int feed/grant vectors: zero
     table bytes, zero forced-token bytes.
+  * long-prompt — few slots x 256-token prompts x short outputs: the
+    admission-latency showcase.  The ragged multi-token PREFILL LANE (one
+    compiled kernel step appends and attends a 64-token chunk; a prompt
+    costs ceil(256/64) = 4 dispatches) against the same engine with the
+    lane disabled (prefill-by-decode: 256 sequential decode-cell steps),
+    reporting PROMPT tokens/s for both and the lane's forced-upload bytes
+    (must be 0: prompt traffic moves as one ragged (B, T) block per
+    chunk).
 
 ``--json`` writes BENCH_serve.json so the perf trajectory is tracked across
 PRs (scripts/verify.sh gates on it).
@@ -72,6 +81,14 @@ SHARED = dict(arch="granite-8b", batch=4, max_seq=96, requests=12,
 # steady-state tick the optimizations target
 LONG_DECODE = dict(arch="granite-8b", batch=2, max_seq=256, requests=4,
                    prompt=8, out=96, page_size=16, prefill_chunk=8)
+# few slots x LONG prompts x short outputs: the admission-latency
+# showcase.  The ragged prefill lane appends a prompt in ceil(256/64) = 4
+# kernel steps; the prefill-by-decode baseline pays 256 sequential
+# decode-cell steps for the same rows.  chunk_tokens 64 = 4 exact pages
+# (page-aligned chunks never leave a partially written page mid-prompt)
+LONG_PROMPT = dict(arch="granite-8b", batch=2, max_seq=320, requests=4,
+                   prompt=256, out=8, page_size=16, prefill_chunk=8,
+                   prefill_chunk_tokens=64)
 
 
 def _model(arch):
@@ -325,6 +342,54 @@ def run_long_decode() -> Dict[str, float]:
     }
 
 
+def run_long_prompt() -> Dict[str, float]:
+    """Long-prompt serving: few slots, 256-token prompts, short outputs —
+    the admission-latency showcase.  The ragged multi-token prefill lane
+    (one compiled kernel step per 64-token chunk) against the SAME engine
+    with the lane disabled (prefill-by-decode: one decode step per prompt
+    token), at equal pool/page/chunk config.  Reports PROMPT tokens/s and
+    pins the lane's zero-forced-upload claim (prompt traffic moves as one
+    ragged (B, T) block per chunk, never as per-step forced arrays)."""
+    from repro.serve.engine import PagedEngine, ServeConfig
+    L = LONG_PROMPT
+    cfg, model, params = _model(L["arch"])
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, cfg.vocab_size,
+                         size=L["prompt"]).astype(np.int32), L["out"])
+            for _ in range(L["requests"])]
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+    prompt_tokens = sum(len(p) for p, _ in reqs)
+
+    stats = {}
+    for name, lane in (("lane", True), ("decode", False)):
+        pe = PagedEngine(
+            model, params,
+            ServeConfig(max_batch=L["batch"], max_seq=L["max_seq"],
+                        page_size=L["page_size"],
+                        prefill_chunk=L["prefill_chunk"],
+                        prefill_lane=lane,
+                        prefill_chunk_tokens=L["prefill_chunk_tokens"],
+                        trace_pool=False))
+        _drive(pe, warm)                             # compile all cells
+        best = max((_drive(pe, reqs) for _ in range(2)),
+                   key=lambda s: s["tokens_per_s"])
+        best["prompt_tokens_per_s"] = prompt_tokens / best["seconds"]
+        best["forced_upload_bytes"] = float(pe.forced_upload_bytes)
+        stats[name] = best
+
+    lane, dec = stats["lane"], stats["decode"]
+    return {
+        "long_prompt_tokens": float(prompt_tokens),
+        "long_prompt_tokens_per_s_lane": lane["prompt_tokens_per_s"],
+        "long_prompt_tokens_per_s_decode": dec["prompt_tokens_per_s"],
+        "long_prompt_speedup": (lane["prompt_tokens_per_s"]
+                                / max(dec["prompt_tokens_per_s"], 1e-9)),
+        "long_prompt_ticks_lane": lane["ticks"],
+        "long_prompt_ticks_decode": dec["ticks"],
+        "long_prompt_forced_upload_bytes": lane["forced_upload_bytes"],
+    }
+
+
 def _shared_requests(cfg, rng) -> List:
     s = SHARED
     sys_prompt = rng.randint(0, cfg.vocab_size,
@@ -409,6 +474,16 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"/upload_B={stats['tick_upload_bytes']:.0f}",
             f"serve/tick-steady,0,frac={stats['tick_steady_frac']:.2f}",
         ]
+    if "long_prompt_tokens_per_s_lane" in stats:
+        lines += [
+            f"serve/long-prompt-lane,0,"
+            f"prompt_tokens_per_s={stats['long_prompt_tokens_per_s_lane']:.1f}",
+            f"serve/long-prompt-decode,0,"
+            f"prompt_tokens_per_s="
+            f"{stats['long_prompt_tokens_per_s_decode']:.1f}",
+            f"serve/long-prompt-speedup,0,"
+            f"x{stats['long_prompt_speedup']:.2f}",
+        ]
     if "shared_tokens_per_s" in stats:
         lines += [
             f"serve/shared-prefix,0,"
@@ -428,6 +503,7 @@ def bench() -> List[str]:
     stats.update(run_ragged())
     stats.update(run_shared())
     stats.update(run_long_decode())
+    stats.update(run_long_prompt())
     return bench_lines_from(stats)
 
 
@@ -437,13 +513,15 @@ def main() -> int:
                     help="write BENCH_serve.json next to the repo root")
     ap.add_argument("--scenario",
                     choices=("smoke", "ragged", "shared-prefix",
-                             "long-decode", "all"),
+                             "long-decode", "long-prompt", "all"),
                     default="all",
                     help="smoke: fused-vs-loop decode; ragged: paged vs "
                          "dense waves under mixed lengths; shared-prefix: "
                          "prefix sharing vs no sharing at equal pool; "
                          "long-decode: few slots x long generations with "
-                         "per-tick host-overhead metrics")
+                         "per-tick host-overhead metrics; long-prompt: "
+                         "few slots x 256-token prompts — the ragged "
+                         "prefill lane vs prefill-by-decode")
     args = ap.parse_args()
     stats: Dict[str, float] = {}
     if args.scenario in ("smoke", "all"):
@@ -454,6 +532,8 @@ def main() -> int:
         stats.update(run_shared())
     if args.scenario in ("long-decode", "all"):
         stats.update(run_long_decode())
+    if args.scenario in ("long-prompt", "all"):
+        stats.update(run_long_prompt())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
@@ -494,6 +574,11 @@ def main() -> int:
                    if k.startswith("long_decode_")})
             record["tick_overhead"] = {
                 k: stats[k] for k in stats if k.startswith("tick_")}
+        if args.scenario in ("long-prompt", "all"):
+            record["long_prompt"] = dict(
+                config=LONG_PROMPT,
+                **{k: stats[k] for k in stats
+                   if k.startswith("long_prompt_")})
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

@@ -57,6 +57,7 @@ GATED = [
     "shared_prefix.shared_tokens_per_s",
     "shared_prefix.shared_logical_physical_ratio",
     "long_decode.long_decode_tokens_per_s",
+    "long_prompt.long_prompt_tokens_per_s_lane",
     "census.lines_per_s",
 ]
 # per-tick overheads must not climb above ceiling x committed — the
@@ -111,6 +112,23 @@ if sf is not None and sf < 0.25:
     print(f"  [REGRESSION] steady-tick fraction {sf:.2f} < 0.25 "
           f"(long-decode ticks are paying per-tick uploads/dispatches)")
     failed.append("steady_tick_frac_floor")
+# the ragged prefill lane must beat prefill-by-decode on prompt tokens/s
+# (acceptance: >= 2x committed; 1.5x here catches collapses under
+# container contention without flaking the gate — deliberately a HARD
+# floor only, NOT in GATED: a ratio of two wall-clock runs swings too
+# much under contention for a relative-to-committed floor)
+ps = get(new, "long_prompt.long_prompt_speedup")
+if ps is not None and ps < 1.5:
+    print(f"  [REGRESSION] prefill-lane speedup {ps:.2f} < 1.5 "
+          f"(the multi-token prefill lane lost to prefill-by-decode)")
+    failed.append("long_prompt_speedup_floor")
+# prompt traffic routed through the lane must never build the per-step
+# (chunk, B) forced-token arrays — the upload the lane exists to retire
+fb = get(new, "long_prompt.long_prompt_forced_upload_bytes")
+if fb is not None and fb != 0:
+    print(f"  [REGRESSION] prefill-lane forced_upload_bytes {fb:.0f} != 0 "
+          f"(prompt traffic leaked back onto the forced decode path)")
+    failed.append("long_prompt_forced_upload_zero")
 
 if failed:
     print(f"[verify] FAILED: {failed}")

@@ -59,6 +59,12 @@ class ArchConfig:
     pages_per_step: int = 1          # paged decode kernel: pages swept per
                                      # grid step (page-list blocking; cuts
                                      # grid steps by P for long slots)
+    prefill_chunk_tokens: int = 0    # ragged paged-prefill lane: prompt
+                                     # tokens per chunked-prefill kernel
+                                     # step (0 = auto: 2x the serving page
+                                     # size; keep it a MULTIPLE of the page
+                                     # size so chunk grants stay page-
+                                     # aligned)
     attn_chunk_q: int = 1024
     attn_chunk_kv: int = 1024
     ssm_chunk: int = 256

@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels.decode_attention import decode as _decode
 from repro.kernels.decode_attention import paged as _paged
+from repro.kernels.decode_attention import prefill_paged as _prefill
 
 
 def _auto_interpret(interpret):
@@ -44,4 +45,21 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     return _paged.paged_decode_attention_fwd(
         q, k_pool, v_pool, block_table, kv_len, layer,
         pages_per_step=pages_per_step,
+        interpret=_auto_interpret(interpret))
+
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_table: jax.Array,
+                            base_len: jax.Array, new_len: jax.Array,
+                            layer=0,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Ragged multi-token paged prefill: q (B, T, H, D) chunk (its K/V
+    rows already scattered into the pool); k_pool, v_pool
+    (L, num_pages, page, KV, D) stacked pools (4D single-layer accepted);
+    block_table (B, max_blocks) int32 (page 0 = reserved null page);
+    base_len (B,) int32 tokens resident before the chunk; new_len (B,)
+    int32 = base_len + granted chunk tokens; layer — pool layer to
+    address.  Returns (B, T, H, D)."""
+    return _prefill.paged_prefill_attention_fwd(
+        q, k_pool, v_pool, block_table, base_len, new_len, layer,
         interpret=_auto_interpret(interpret))

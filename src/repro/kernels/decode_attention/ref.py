@@ -42,3 +42,28 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     kg = k_pool[layer, block_table].reshape(B, NB * page, KV, D)
     vg = v_pool[layer, block_table].reshape(B, NB * page, KV, D)
     return direct_attention(q, kg, vg, causal=False, kv_len=kv_len)
+
+
+def paged_prefill_attention_ref(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_table: jax.Array,
+                                base_len: jax.Array, new_len: jax.Array,
+                                layer=0) -> jax.Array:
+    """Oracle for the ragged multi-token paged PREFILL kernel: q
+    (B, T, H, D) — a chunk whose K/V rows are already scattered into the
+    pool; base_len (B,) tokens resident before the chunk; new_len (B,)
+    = base_len + granted tokens.  Gathers each slot's logical view in one
+    (layer, page) gather — live pages only — then applies the per-slot
+    CAUSAL mask (query row t attends positions <= base_len[b] + t) and the
+    per-slot extent mask (< new_len[b]).  Rows past a slot's grant are
+    masked the same way the kernel masks them (their output is garbage the
+    engine ignores, but the two paths agree row-for-row).
+    Returns (B, T, H, D)."""
+    if k_pool.ndim == 4:
+        k_pool, v_pool = k_pool[None], v_pool[None]
+    B = q.shape[0]
+    _, _, page, KV, D = k_pool.shape
+    NB = block_table.shape[1]
+    kg = k_pool[layer, block_table].reshape(B, NB * page, KV, D)
+    vg = v_pool[layer, block_table].reshape(B, NB * page, KV, D)
+    return direct_attention(q, kg, vg, causal=True, q_offset=base_len,
+                            kv_len=new_len)

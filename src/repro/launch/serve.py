@@ -30,6 +30,15 @@ def main() -> int:
                     help="disable prompt-prefix page sharing on admission")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=4)
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="ragged prefill lane: prompt tokens per chunked-"
+                         "prefill kernel step (0 = auto: 2x --page-size; "
+                         "a prompt costs ceil(prompt/T) dispatches "
+                         "instead of one decode step per token)")
+    ap.add_argument("--no-prefill-lane", action="store_true",
+                    help="route prompts through the decode cell one "
+                         "token per step (legacy prefill-by-decode, kept "
+                         "for measured comparison)")
     ap.add_argument("--pages-per-step", type=int, default=1,
                     help="paged decode kernel page-list blocking: pages "
                          "swept per grid step (cuts grid steps by P for "
@@ -46,6 +55,21 @@ def main() -> int:
     if args.legacy_loop and not args.whole_batch:
         ap.error("--legacy-loop only applies to --whole-batch generation "
                  "(the paged engine always runs the fused decode cell)")
+    if args.page_size < 1:
+        ap.error("--page-size must be >= 1 (tokens per KV page)")
+    if args.pages_per_step < 1:
+        ap.error("--pages-per-step must be >= 1 (pages swept per grid "
+                 "step)")
+    if args.prefill_chunk_tokens < 0:
+        ap.error("--prefill-chunk-tokens must be >= 0 (0 = auto)")
+    if not args.no_prefill_lane and args.prefill_chunk_tokens % args.page_size:
+        print(f"[launch.serve] NOTE: --prefill-chunk-tokens "
+              f"({args.prefill_chunk_tokens}) is not a multiple of "
+              f"--page-size ({args.page_size}) — prefill chunk grants are "
+              f"clipped to page boundaries, so a non-aligned chunk wastes "
+              f"its tail rows on every mid-prompt chunk; pick a multiple "
+              f"of the page size (the same alignment guidance as "
+              f"--sys-prompt-tokens below)")
 
     import jax
     from repro import configs
@@ -79,6 +103,8 @@ def main() -> int:
                        fused=not args.legacy_loop,
                        page_size=args.page_size,
                        prefill_chunk=args.prefill_chunk,
+                       prefill_lane=not args.no_prefill_lane,
+                       prefill_chunk_tokens=args.prefill_chunk_tokens,
                        prefix_sharing=not args.no_prefix_sharing)
     rng = np.random.RandomState(0)
 

@@ -41,10 +41,13 @@ def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     ~3 GB/layer).  ``q_offset`` is the absolute position of q[0] (decode);
     ``kv_len`` masks cache positions >= kv_len — a scalar for the lockstep
     dense cache, or a (B,) vector of per-slot lengths for the paged cache
-    (every slot decodes at its own position); ``kv_start`` (B,) masks
-    cache positions < kv_start[b] — the per-slot window of the
-    continuous-batching engine (a slot joining mid-flight must not attend
-    to the previous occupant's KV rows)."""
+    (every slot decodes at its own position); ``q_offset`` likewise is a
+    scalar for lockstep decode or a (B,) vector of per-slot offsets for
+    the ragged paged-prefill chunk (slot b's query row t sits at absolute
+    position q_offset[b] + t); ``kv_start`` (B,) masks cache positions
+    < kv_start[b] — the per-slot window of the continuous-batching engine
+    (a slot joining mid-flight must not attend to the previous occupant's
+    KV rows)."""
     B, S, H, D = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -55,10 +58,16 @@ def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     tpos = jnp.arange(T)
     if causal:
         qpos = jnp.arange(S)
-        if q_offset is not None:
-            qpos = qpos + q_offset
-        mask = qpos[:, None] >= tpos[None, :]
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if q_offset is not None and jnp.ndim(q_offset) == 1:
+            # per-slot offsets: (B, S) query positions -> (B, S, T) mask
+            qpos = qpos[None, :] + jnp.asarray(q_offset)[:, None]
+            mask = qpos[:, :, None] >= tpos[None, None, :]
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
+        else:
+            if q_offset is not None:
+                qpos = qpos + q_offset
+            mask = qpos[:, None] >= tpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
     if kv_len is not None:
         kvl = jnp.asarray(kv_len)
         if kvl.ndim == 0:

@@ -178,6 +178,39 @@ class Model:
             cfg = dataclasses.replace(cfg, embed_inputs=True)
         return T.lm_decode_paged(params, cfg, tokens, cache, active)
 
+    def prefill_step_paged(self, params, tokens, cache, grants):
+        """Ragged multi-token paged prefill step: tokens (B, T) int32 —
+        each slot's next prompt chunk (row i's first ``grants[i]`` entries
+        real, rest pad); cache from ``init_paged_cache``; grants (B,)
+        int32 chunk tokens granted per slot (0 = idle).  Appends all
+        granted rows and attends causally in ONE compiled step — a
+        P-token prompt costs ceil(P / T) steps instead of P decode steps.
+        Returns (logits (B, V) at each slot's last granted position,
+        cache with length advanced by grants)."""
+        cfg = self.cfg
+        if not cfg.embed_inputs:
+            cfg = dataclasses.replace(cfg, embed_inputs=True)
+        return T.lm_prefill_paged(params, cfg, tokens, cache, grants)
+
+    def prefill_many_paged(self, params, tokens, cache, key, grants, *,
+                           temperature: float = 0.0):
+        """The engine's prefill-lane cell: one ``prefill_step_paged`` plus
+        on-device sampling of the ONE token the chunk produces — the
+        logits at each slot's last granted position predict either the
+        next (known) prompt token, which the host discards, or the
+        request's FIRST output token when the grant drains the prompt.
+
+        The sampler key splits once per prefill chunk (not once per
+        token): prompt positions never consume randomness, so greedy
+        serving is token-identical to the prefill-by-decode path, and
+        temperature serving stays self-consistent within a lane.
+
+        Returns (next_tok (B,) int32, cache, key)."""
+        logits, cache = self.prefill_step_paged(params, tokens, cache,
+                                                grants)
+        nxt, key = sample_token(logits, key, temperature)
+        return nxt, cache, key
+
     def decode_many_paged(self, params, tokens, cache, key, active,
                           forced_tok=None, forced_mask=None, *,
                           num_steps: int, temperature: float = 0.0):

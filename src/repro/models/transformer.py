@@ -304,6 +304,61 @@ def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     return out, k_pool, v_pool
 
 
+def attn_prefill_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
+                       table, base, new_len):
+    """Ragged multi-token CHUNKED-PREFILL path over the paged KV pool:
+    h (B, T, d) — a chunk of up to T prompt tokens per slot; base (B,)
+    int32 tokens resident before the chunk; new_len (B,) int32 = base +
+    the slot's granted chunk tokens (rows past the grant are dead: their
+    K/V appends land on the null page and their outputs are ignored).
+
+    Scatters ALL the chunk's K/V rows in one (layer, page) scatter — row t
+    of slot b goes to page ``table[b, (base[b]+t) // page]``, row
+    ``(base[b]+t) % page`` — then computes CAUSAL attention of the whole
+    (T, ...) query block against the slot's live pages plus the in-flight
+    chunk (query row t attends positions <= base[b]+t, so the pre-scattered
+    future rows of the same chunk are invisible to earlier rows).  One
+    kernel step appends and attends T tokens; the prefill-by-decode path
+    paid T sequential decode-cell steps for the same rows.
+
+    The COW-aware append invariant of ``attn_decode_paged`` carries over
+    verbatim: the scheduler privatizes any shared page the chunk's rows
+    would touch (and grants prefill in page-aligned token blocks) BEFORE
+    the tick, so a chunk scatter can never reach rows another block table
+    still exposes."""
+    hn = apply_norm(h, p["ln1"], cfg)
+    a = p["attn"]
+    q, k, v = _qkv(hn, a, cfg, rope, decode=True)
+    B, T, _ = h.shape
+    page = k_pool.shape[2]
+    nb = table.shape[1]
+    tok_pos = base[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    blk = jnp.minimum(tok_pos // page, nb - 1)
+    live = tok_pos < new_len[:, None]                       # granted rows
+    phys = jnp.where(live, jnp.take_along_axis(table, blk, axis=1), 0)
+    off = (tok_pos % page).reshape(B * T)
+    phys = phys.reshape(B * T)
+    KV, hd = k.shape[2], k.shape[3]
+    k_pool = k_pool.at[layer, phys, off].set(
+        k.reshape(B * T, KV, hd).astype(k_pool.dtype))
+    v_pool = v_pool.at[layer, phys, off].set(
+        v.reshape(B * T, KV, hd).astype(v_pool.dtype))
+    # keep the pool page-sharded through the in-place update
+    k_pool = constrain(k_pool, None, "cache_seq", None, None, None)
+    v_pool = constrain(v_pool, None, "cache_seq", None, None, None)
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.decode_attention.ops import paged_prefill_attention
+        out = paged_prefill_attention(q, k_pool, v_pool, table, base,
+                                      new_len, layer)
+    else:
+        from repro.kernels.decode_attention.ref import (
+            paged_prefill_attention_ref)
+        out = paged_prefill_attention_ref(q, k_pool, v_pool, table, base,
+                                          new_len, layer)
+    out = dense(out.reshape(B, T, -1), a["wo"])
+    return out, k_pool, v_pool
+
+
 def ffn_apply(h, p, cfg: ArchConfig):
     hn = apply_norm(h, p["ln2"], cfg)
     f = p["ffn"]
@@ -312,6 +367,19 @@ def ffn_apply(h, p, cfg: ArchConfig):
     else:
         out = gelu_mlp(hn, f["w_up"], f["b_up"], f["w_down"], f["b_down"])
     return constrain(out, "batch", None, None)
+
+
+def decode_ffn(h, p, cfg: ArchConfig):
+    """The post-attention residual of a decode/prefill step: routed MoE
+    (aux dropped — no load-balance loss at inference) or the dense FFN.
+    Shared by the dense decode, paged decode and paged prefill bodies so
+    the lanes cannot silently diverge."""
+    if cfg.n_experts:
+        m = p["moe"]
+        hn = apply_norm(h, p["ln2"], cfg)
+        o, _ = moe_ffn(hn, m["router"], m["w1"], m["w2"], m.get("w3"), cfg)
+        return h + o
+    return h + ffn_apply(h, p, cfg)
 
 
 def dense_block(h, p, cfg: ArchConfig, rope):
@@ -489,14 +557,7 @@ def lm_decode(params, cfg: ArchConfig, tokens, cache):
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, v_c, li, 0)
         k_all = constrain(k_all, None, "batch", "cache_seq", None, None)
         v_all = constrain(v_all, None, "batch", "cache_seq", None, None)
-        if cfg.n_experts:
-            m = p["moe"]
-            hn = apply_norm(h, p["ln2"], cfg)
-            o, _ = moe_ffn(hn, m["router"], m["w1"], m["w2"], m.get("w3"),
-                           cfg)
-            h = h + o
-        else:
-            h = h + ffn_apply(h, p, cfg)
+        h = decode_ffn(h, p, cfg)
         return (h, k_all, v_all, li + 1), None
 
     (h, k, v, _), _ = jax.lax.scan(
@@ -530,14 +591,7 @@ def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
         out, k_all, v_all = attn_decode_paged(h, p, cfg, rope, k_all, v_all,
                                               li, table, lengths, active)
         h = h + out
-        if cfg.n_experts:
-            m = p["moe"]
-            hn = apply_norm(h, p["ln2"], cfg)
-            o, _ = moe_ffn(hn, m["router"], m["w1"], m["w2"], m.get("w3"),
-                           cfg)
-            h = h + o
-        else:
-            h = h + ffn_apply(h, p, cfg)
+        h = decode_ffn(h, p, cfg)
         return (h, k_all, v_all, li + 1), None
 
     (h, k, v, _), _ = jax.lax.scan(
@@ -545,6 +599,53 @@ def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
     new_cache = dict(cache, k=k, v=v,
                      length=lengths + active.astype(jnp.int32))
     return _logits(params, cfg, h)[:, 0], new_cache
+
+
+def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
+    """Ragged multi-token paged prefill: tokens (B, T) int32 — each slot's
+    next chunk of prompt tokens (row i's first ``grants[i]`` entries are
+    real; the rest are pad the masks ignore); cache as in
+    ``lm_decode_paged``; grants (B,) int32 — prompt tokens granted to each
+    slot this chunk (0 = slot idle: nothing appended, length frozen).
+
+    Appends all granted rows in ONE (layer, page) scatter per layer and
+    attends causally over history + in-flight chunk, so admitting a
+    P-token prompt costs ceil(P / T) compiled steps instead of P decode
+    steps.  Only the logits at each slot's LAST granted position are
+    unembedded (the next token after any earlier position is a known
+    prompt token) — the unembed cost stays chunk-size independent.
+
+    Returns (logits (B, V) at position grants-1 per slot, new cache with
+    length advanced by grants).  Decoder-only attention LMs only."""
+    if cfg.mamba_version or cfg.is_encoder_decoder:
+        raise ValueError("paged prefill requires a decoder-only attention "
+                         "LM")
+    lengths = cache["length"]
+    table = cache["table"]
+    B, T = tokens.shape
+    grants = jnp.asarray(grants, jnp.int32)
+    new_len = lengths + grants
+    positions = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, B, T))
+    rope = _rope(cfg, positions)
+    h = _embed_in(params, cfg, tokens)
+
+    def body(carry, p):
+        h, k_all, v_all, li = carry
+        out, k_all, v_all = attn_prefill_paged(
+            h, p, cfg, rope, k_all, v_all, li, table, lengths, new_len)
+        h = h + out
+        h = decode_ffn(h, p, cfg)
+        return (h, k_all, v_all, li + 1), None
+
+    (h, k, v, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
+    # last granted position per slot (grants==0 -> clipped; caller ignores)
+    last = jnp.maximum(grants - 1, 0)[:, None, None]
+    h_last = jnp.take_along_axis(h, last, axis=1)           # (B, 1, d)
+    new_cache = dict(cache, k=k, v=v, length=new_len)
+    return _logits(params, cfg, h_last)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -18,30 +18,38 @@ Two engines, one compiled-cell discipline (no recompiles, ever):
   * ``PagedEngine`` — THE production path: non-lockstep continuous
     batching over a ``PagedKVCache`` (serve/cache.py: refcounted page pool
     + per-slot block tables + per-slot lengths) driven by a
-    ``TickScheduler`` (serve/scheduler.py: partial grants, fairness,
-    per-tick budget).  Every slot decodes at its own position on its own
-    pages (rope is request-relative by construction), prompts are
-    CHUNK-PREFILLED through the same compiled cell (forced-token
-    override), and a request admitted with a prompt prefix already
-    resident in a live slot's pages SHARES those pages (refcount bump, no
-    recompute; the donor is found through a rolling-hash prefix index, not
-    a linear LCP scan) — appends into a shared page copy-on-write
-    privatize it first, all of a tick's copies batched into ONE device
-    dispatch.  A request can outlive ``max_seq`` total traffic (pages
-    recycle), mid-flight joins reuse the compiled cells, and the decode
-    kernel's transaction count scales with live tokens, not pool size —
-    the engine's regression suite pins all three guarantees, migrated from
-    the retired dense lockstep engine (its row-wraparound machinery is
-    gone; per-slot pages make it unnecessary).
+    ``TickScheduler`` (serve/scheduler.py: prefill-lane + decode grants,
+    partial grants, fairness, per-tick budget).  Every slot decodes at
+    its own position on its own pages (rope is request-relative by
+    construction), prompts stream through the RAGGED MULTI-TOKEN PREFILL
+    LANE (``Model.prefill_many_paged``: one compiled kernel step appends
+    and causally attends a page-aligned chunk of up to T prompt tokens
+    per slot, so admitting a P-token prompt costs ceil(P / T) dispatches
+    instead of P decode steps), and a request admitted with a prompt
+    prefix already resident in a live slot's pages SHARES those pages
+    (refcount bump, no recompute; the donor is found through a
+    rolling-hash prefix index, not a linear LCP scan) — appends into a
+    shared page copy-on-write privatize it first, all of a tick's copies
+    batched into ONE device dispatch.  A request can outlive ``max_seq``
+    total traffic (pages recycle), mid-flight joins reuse the compiled
+    cells, and the decode kernel's transaction count scales with live
+    tokens, not pool size — the engine's regression suite pins all three
+    guarantees, migrated from the retired dense lockstep engine (its
+    row-wraparound machinery is gone; per-slot pages make it
+    unnecessary).
 
-    The TICK is host-side as thin as the kernel: exactly two compiled
-    cells (prefill-in-flight with forced-token arrays, pure decode
-    without — each compiled once), a device-resident block table / length
-    state patched only at DIRTY rows (a steady-state decode tick uploads
-    zero table bytes and runs one dispatch), per-slot step grants
-    uploaded as B ints, and per-tick host-cost traces (host ms,
-    dispatches, upload bytes) feeding BENCH_serve.json's tick_overhead
-    section.
+    The TICK is host-side as thin as the kernel: at most two compiled
+    cells per tick (the ragged prefill lane for prompt chunks, the
+    forced-token-free decode twin for generation — each compiled once; a
+    legacy forced-token decode cell remains only for the measured
+    ``prefill_lane=False`` baseline), a device-resident block table /
+    length state patched only at DIRTY rows (a steady-state decode tick
+    uploads zero table bytes and runs one dispatch), per-slot grants
+    uploaded as B ints, prompt chunks uploaded as ONE ragged (B, T) token
+    block (the per-step (chunk, B) forced-token/mask uploads are retired
+    for prompt traffic — ``forced_upload_bytes`` stays 0 and verify.sh
+    gates it), and per-tick host-cost traces (host ms, dispatches, upload
+    bytes) feeding BENCH_serve.json's tick_overhead section.
 
 CPU-runnable end-to-end (examples/serve_demo.py); the same step functions are
 what launch/serve.py lowers for the production mesh.
@@ -75,7 +83,17 @@ class ServeConfig:
     page_size: int = 16               # tokens per KV page
     max_blocks: int = 0               # block-table width (0: ceil(max_seq/page))
     num_pages: int = 0                # pool size incl. null page (0: fit all slots)
-    prefill_chunk: int = 4            # fused steps per PagedEngine tick
+    prefill_chunk: int = 4            # fused decode steps per PagedEngine tick
+    # --- ragged multi-token prefill lane ------------------------------------
+    prefill_lane: bool = True         # prompts go through the multi-token
+                                      # prefill kernel (one compiled step
+                                      # per chunk); False = legacy
+                                      # prefill-by-decode (one step/token)
+    prefill_chunk_tokens: int = 0     # prompt tokens per prefill-lane chunk
+                                      # (0 = ArchConfig.prefill_chunk_tokens,
+                                      # then auto: 2 x page_size; keep it a
+                                      # multiple of page_size so chunk
+                                      # grants stay page-aligned)
     # --- prefix sharing / scheduling ---------------------------------------
     prefix_sharing: bool = True       # share resident prompt prefixes on admit
     share_min_tokens: int = 1         # smallest common prefix worth sharing
@@ -250,17 +268,22 @@ class ServingEngine:
 
 @dataclasses.dataclass
 class _Slot:
-    """One schedulable slot: ``forced`` holds the prompt tokens still to be
-    forced into the stream (prefill-by-decode); ``history`` mirrors the
-    tokens whose K/V rows are resident in the slot's pages (the prefix-
-    sharing donor index — ``len(history) == kv.length[i]`` always);
-    ``served`` counts fresh tokens appended (the fairness key)."""
+    """One schedulable slot: ``forced`` holds the prompt tokens queued
+    behind the feed token (consumed by the prefill lane in chunks, or
+    forced into the decode stream one per step when the lane is off);
+    ``prompt_left`` counts prompt tokens not yet appended (feed + forced
+    while prefilling, 0 once the first output is sampled — the scheduler's
+    lane selector); ``history`` mirrors the tokens whose K/V rows are
+    resident in the slot's pages (the prefix-sharing donor index —
+    ``len(history) == kv.length[i]`` always); ``served`` counts fresh
+    tokens appended (the fairness key)."""
     rid: int = -1
     forced: List[int] = dataclasses.field(default_factory=list)
     out: List[int] = dataclasses.field(default_factory=list)
     history: List[int] = dataclasses.field(default_factory=list)
     budget: int = 0
     served: int = 0
+    prompt_left: int = 0
     active: bool = False
 
 
@@ -373,18 +396,30 @@ class _PrefixIndex:
 class PagedEngine(_SlotQueueBase):
     """Non-lockstep continuous batching over the paged KV cache.
 
-    Every engine tick runs ONE fused ``decode_many_paged`` chunk
-    (``cfg.prefill_chunk`` compiled scan steps) under a per-step active
-    mask planned by the ``TickScheduler``: slot ``i`` advances for its
-    granted ``steps[i] <= chunk`` steps and idles for the rest (null-page
-    appends, frozen length) — a slot short on pages runs a PARTIAL chunk
-    instead of sitting out the tick.  Each slot advances at its OWN
-    position (per-slot ``length``), so a request admitted mid-flight
-    starts at position 0 of its own pages and rope is request-relative by
-    construction: outputs are token-identical to a fresh single-request
-    run (property-fuzzed), total traffic can outlive ``max_seq`` (pages
-    recycle through the free list), and the ONE jitted cell never
-    recompiles (regression-tested via its compile-cache size).
+    Every engine tick runs at most TWO fused cells planned by the
+    ``TickScheduler``:
+
+      * the RAGGED PREFILL LANE (``prefill_many_paged``) — slots with
+        unfed prompt tokens advance by a page-aligned chunk of up to
+        ``prefill_chunk_tokens`` of them in ONE compiled kernel step
+        (append + causal attention over history and the in-flight chunk),
+        so admission latency scales with ceil(prompt / T) dispatches, not
+        with prompt length; the chunk's single sampled token seeds the
+        request's first output when the prompt drains;
+      * the DECODE cell (``decode_many_paged``) — generating slots run
+        ``cfg.prefill_chunk`` compiled scan steps under a per-step active
+        mask: slot ``i`` advances for its granted ``steps[i] <= chunk``
+        steps and idles for the rest (null-page appends, frozen length) —
+        a slot short on pages runs a PARTIAL chunk instead of sitting out
+        the tick.
+
+    Each slot advances at its OWN position (per-slot ``length``), so a
+    request admitted mid-flight starts at position 0 of its own pages and
+    rope is request-relative by construction: outputs are token-identical
+    to a fresh single-request run (property-fuzzed, lane on AND off),
+    total traffic can outlive ``max_seq`` (pages recycle through the free
+    list), and the jitted cells never recompile (regression-tested via
+    their compile-cache sizes).
 
     PREFIX SHARING: admission matches the new prompt against the token
     history of every live slot; the longest common prefix (capped so at
@@ -394,12 +429,13 @@ class PagedEngine(_SlotQueueBase):
     copy-on-write privatizes a shared block before any append touches it —
     and eviction only returns a page once its refcount drains.
 
-    Chunked prefill rides the SAME compiled cell: prompt tokens override
-    the sampled output (forced mask) until the prompt drains, then sampled
-    tokens are collected.  Page lifecycle: admission allocates from the
-    free list (or references shared pages), finished slots' references are
-    dropped on finish, a slot that cannot get capacity STALLS until
-    eviction frees pages, and ``defrag()`` compacts the pool.
+    With ``prefill_lane=False`` prompts ride the decode cell as forced
+    tokens (prefill-by-decode, one sequential step per prompt token) —
+    the measured baseline the lane is benchmarked and gated against.
+    Page lifecycle: admission allocates from the free list (or references
+    shared pages), finished slots' references are dropped on finish, a
+    slot that cannot get capacity STALLS until eviction frees pages, and
+    ``defrag()`` compacts the pool.
 
     Decoder-only attention LMs only (a joining SSM slot would inherit the
     previous occupant's state; whisper needs per-request cross caches).
@@ -426,6 +462,20 @@ class PagedEngine(_SlotQueueBase):
                 num_steps=num_steps, temperature=temperature),
             static_argnames=("num_steps", "temperature"),
             donate_argnums=(2, 3))
+        # the ragged multi-token PREFILL LANE: one compiled step appends
+        # and attends a (B, T) chunk of prompt tokens — a prompt costs
+        # ceil(prompt / T) dispatches instead of `prompt` decode steps,
+        # and prompt traffic stops paying the (chunk, B) forced-token
+        # uploads entirely.  T = 0 disables the lane (legacy
+        # prefill-by-decode through the forced decode cell).
+        self._chunk_tokens = 0
+        if cfg.prefill_lane:
+            self._chunk_tokens = (cfg.prefill_chunk_tokens
+                                  or model.cfg.prefill_chunk_tokens
+                                  or 2 * cfg.page_size)
+        self._prefill_lane = jax.jit(model.prefill_many_paged,
+                                     static_argnames=("temperature",),
+                                     donate_argnums=(2, 3))  # cache + key
         # dirty-row patcher for the device table/length mirrors
         self._patch = jax.jit(_patch_rows, donate_argnums=(0, 1))
         self.kv = PagedKVCache(model, B, cfg.max_seq,
@@ -456,7 +506,7 @@ class PagedEngine(_SlotQueueBase):
             # pre-compile the COW flush for every batch size up to the
             # per-tick bound (capped at 8; rarer, larger bursts compile
             # lazily once) so a COW tick never pays an XLA compile
-            chunk = max(1, cfg.prefill_chunk)
+            chunk = max(1, cfg.prefill_chunk, self._chunk_tokens)
             bound = B * (-(-chunk // self.kv.page) + 1)
             self.kv.warm_copy(tuple(range(1, min(bound, 8) + 1)))
         self._pindex = _PrefixIndex()
@@ -479,7 +529,11 @@ class PagedEngine(_SlotQueueBase):
         # --- tick-overhead accounting (the host side the roofline can't
         # see: BENCH_serve.json's tick_overhead section reads these) ------
         self.table_upload_bytes = 0       # dirty-row table/length patches
-        self.forced_upload_bytes = 0      # forced-token arrays (prefill)
+        self.forced_upload_bytes = 0      # forced-token arrays (legacy
+                                          # prefill-by-decode only: stays 0
+                                          # while the prefill lane routes
+                                          # all prompt traffic — gated)
+        self.prefill_upload_bytes = 0     # (B, T) chunk tokens + grants
         self.upload_bytes = 0             # all per-tick host->device bytes
         self.host_ms_trace: List[float] = []     # host work per tick (ms)
         self.dispatch_trace: List[int] = []      # device calls per tick
@@ -533,7 +587,9 @@ class PagedEngine(_SlotQueueBase):
             self.kv.ensure(i, n_shared + 1)
             self.slots[i] = _Slot(rid=req.rid, forced=prompt[n_shared + 1:],
                                   out=[], history=prompt[:n_shared],
-                                  budget=req.max_new_tokens, active=True)
+                                  budget=req.max_new_tokens,
+                                  prompt_left=len(prompt) - n_shared,
+                                  active=True)
             if self.cfg.prefix_sharing:
                 self._pindex.add(i, prompt[:n_shared])
             self._feed[i] = prompt[n_shared]
@@ -553,24 +609,32 @@ class PagedEngine(_SlotQueueBase):
         self.kv.defrag()
 
     def step(self) -> None:
-        """One engine tick: admit, plan (partial grants / batched COW /
-        fairness), sync the dirty rows of the device-resident table state,
-        then advance every granted slot by its planned steps through the
-        fused cell.
+        """One engine tick: admit, plan (prefill-lane + decode grants /
+        partial grants / batched COW / fairness), sync the dirty rows of
+        the device-resident table state, then advance every granted slot —
+        prompt chunks through the RAGGED PREFILL LANE (one compiled kernel
+        step appends and attends up to T prompt tokens per slot; a prompt
+        costs ceil(prompt / T) dispatches instead of ``prompt`` decode
+        steps) and decode grants through the fused decode cell.
 
         The tick is kept as thin as the kernel: the tick's COW copies are
         ONE batched dispatch (flushed inside ``plan``), the block table and
         lengths live on device and only dirty rows are patched (a
         steady-state decode tick uploads zero table bytes), the per-slot
-        grants go up as B ints (the per-step mask is built on device), and
-        a tick with no prompt in flight runs the forced-token-free twin
-        cell so no (chunk, B) forced arrays are built or uploaded."""
+        grants go up as B ints (the per-step decode mask is built on
+        device), prompt traffic moves as ONE ragged (B, T) token block per
+        prefill chunk (the per-step (chunk, B) forced-token/mask uploads
+        are retired for prompts — ``forced_upload_bytes`` stays 0 and is
+        gated), and a pure-decode tick runs the forced-token-free twin
+        cell."""
         cfg = self.cfg
         chunk = max(1, cfg.prefill_chunk)
+        T = self._chunk_tokens
         t0 = time.perf_counter()
         self._admit()
         cow_disp0 = self.kv.cow_dispatches
-        plan = self.scheduler.plan(self.slots, self.kv, chunk)
+        plan = self.scheduler.plan(self.slots, self.kv, chunk,
+                                   prefill_tokens=T)
         self.stalls += plan.stalled
         if not plan.any_work:
             if self.busy:
@@ -581,8 +645,9 @@ class PagedEngine(_SlotQueueBase):
             return
         B = len(self.slots)
         steps = plan.steps
+        pgr = plan.prefill
         dispatches = self.kv.cow_dispatches - cow_disp0   # batched COW: <= 1
-        tick_upload = 2 * B * 4               # feed tokens + step grants
+        tick_upload = 0
 
         # dirty-row sync of the device table/length mirrors: only rows
         # admission/COW/eviction/defrag touched; nothing in steady state.
@@ -605,43 +670,97 @@ class PagedEngine(_SlotQueueBase):
 
         cache = {"k": self.kv.k, "v": self.kv.v,
                  "table": self._table_dev, "length": self._length_dev}
-        feed = jnp.asarray(self._feed)[:, None]
-        steps_dev = jnp.asarray(steps)
-        prompt_in_flight = any(s.active and s.forced and steps[i]
-                               for i, s in enumerate(self.slots))
-        if prompt_in_flight:
-            forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
-            forced_mask = np.zeros((chunk, B), bool)
+
+        # --- prefill lane: one ragged (B, T) chunk of prompt tokens ------
+        nxt = None
+        if pgr.any():
+            tok_mat = np.full((B, T), cfg.pad_id, np.int32)
             for i, slot in enumerate(self.slots):
-                for s in range(min(len(slot.forced), int(steps[i]))):
-                    forced_tok[s, i] = slot.forced[s]
-                    forced_mask[s, i] = True
-            forced_bytes = chunk * B * (4 + 1)
-            self.forced_upload_bytes += forced_bytes
-            tick_upload += forced_bytes
-            toks, cache, self.key = self._many(
-                self.params, feed, cache, self.key, steps_dev,
-                jnp.asarray(forced_tok), jnp.asarray(forced_mask),
-                num_steps=chunk, temperature=cfg.temperature)
-        else:
-            toks, cache, self.key = self._many_plain(
-                self.params, feed, cache, self.key, steps_dev,
-                num_steps=chunk, temperature=cfg.temperature)
-        dispatches += 1
+                g = int(pgr[i])
+                if g:
+                    tok_mat[i, 0] = self._feed[i]
+                    if g > 1:
+                        tok_mat[i, 1:g] = slot.forced[:g - 1]
+            pbytes = B * (T + 1) * 4          # token block + grant vector
+            self.prefill_upload_bytes += pbytes
+            tick_upload += pbytes
+            nxt, cache, self.key = self._prefill_lane(
+                self.params, jnp.asarray(tok_mat), cache, self.key,
+                jnp.asarray(pgr), temperature=cfg.temperature)
+            dispatches += 1
+
+        # --- decode lane: the fused scan over decode grants --------------
+        toks = None
+        if steps.any():
+            tick_upload += 2 * B * 4          # feed tokens + step grants
+            feed = jnp.asarray(self._feed)[:, None]
+            steps_dev = jnp.asarray(steps)
+            prompt_in_flight = any(s.active and s.forced and steps[i]
+                                   for i, s in enumerate(self.slots))
+            if prompt_in_flight:
+                # legacy prefill-by-decode (lane disabled): prompts ride
+                # the decode cell as forced tokens
+                forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
+                forced_mask = np.zeros((chunk, B), bool)
+                for i, slot in enumerate(self.slots):
+                    for s in range(min(len(slot.forced), int(steps[i]))):
+                        forced_tok[s, i] = slot.forced[s]
+                        forced_mask[s, i] = True
+                forced_bytes = chunk * B * (4 + 1)
+                self.forced_upload_bytes += forced_bytes
+                tick_upload += forced_bytes
+                toks, cache, self.key = self._many(
+                    self.params, feed, cache, self.key, steps_dev,
+                    jnp.asarray(forced_tok), jnp.asarray(forced_mask),
+                    num_steps=chunk, temperature=cfg.temperature)
+            else:
+                toks, cache, self.key = self._many_plain(
+                    self.params, feed, cache, self.key, steps_dev,
+                    num_steps=chunk, temperature=cfg.temperature)
+            dispatches += 1
         self.kv.k = cache["k"]
         self.kv.v = cache["v"]
         self._table_dev = cache["table"]
         self._length_dev = cache["length"]    # device already advanced it
-        self.kv.length += steps               # host mirror of the increment
-        self.tokens_appended += int(steps.sum())
+        self.kv.length += steps + pgr         # host mirror of the increment
+        self.tokens_appended += int(steps.sum()) + int(pgr.sum())
         self.steps_run += 1
         if cfg.trace_pool:
             self.util_trace.append(self.kv.utilization())
             self.occupancy_trace.append(self.kv.occupancy())
 
         t1 = time.perf_counter()
-        toks_np = np.asarray(toks)            # (chunk, B) — device wait
+        toks_np = np.asarray(toks) if toks is not None else None  # device wait
+        nxt_np = np.asarray(nxt) if nxt is not None else None
         t2 = time.perf_counter()
+        # prefill-lane bookkeeping: the chunk's appended tokens are known
+        # on the host (feed + forced prefix) — only the ONE sampled token
+        # per slot came back, and it matters only when the prompt drained
+        for i, slot in enumerate(self.slots):
+            g = int(pgr[i])
+            if not slot.active or g == 0:
+                continue
+            fed = [int(self._feed[i])] + [int(t) for t in slot.forced[:g - 1]]
+            slot.history.extend(fed)
+            if cfg.prefix_sharing:          # the index only feeds donor
+                self._pindex.add(i, fed)    # lookup, gated the same way
+            slot.served += g
+            del slot.forced[:g - 1]
+            slot.prompt_left -= g
+            if slot.prompt_left > 0:
+                # mid-prompt: the sampled token is a known prompt token's
+                # prediction — discard it, feed the next prompt token
+                self._feed[i] = slot.forced.pop(0)
+                continue
+            tok = int(nxt_np[i])            # the request's FIRST output
+            slot.out.append(tok)
+            self.tokens_out += 1
+            if (cfg.eos_id >= 0 and tok == cfg.eos_id) \
+                    or len(slot.out) >= slot.budget:
+                self._finish(i)
+            else:
+                self._feed[i] = tok
+        # decode-lane bookkeeping (legacy forced-prefill rides here too)
         for i, slot in enumerate(self.slots):
             si = int(steps[i])
             if not slot.active or si == 0:
@@ -650,11 +769,12 @@ class PagedEngine(_SlotQueueBase):
             fed = [int(self._feed[i])] \
                 + [int(toks_np[s, i]) for s in range(si - 1)]
             slot.history.extend(fed)
-            if cfg.prefix_sharing:          # the index only feeds donor
-                self._pindex.add(i, fed)    # lookup, gated the same way
+            if cfg.prefix_sharing:
+                self._pindex.add(i, fed)
             slot.served += si
             n_forced = min(len(slot.forced), si)
             del slot.forced[:n_forced]
+            slot.prompt_left = max(0, slot.prompt_left - si)
             finished = False
             for s in range(n_forced, si):
                 if finished:

@@ -1,18 +1,31 @@
 """Tick scheduler: packs chunked-prefill and decode work into each engine
 tick under page-pool pressure.
 
-Every ``PagedEngine`` tick runs ONE fused ``decode_many_paged`` chunk of
-``cfg.prefill_chunk`` compiled scan steps — the compile universe is exactly
-one module, so scheduling freedom lives entirely in the PER-STEP ACTIVE
-MASK: slot ``i`` advances for the first ``steps[i] <= chunk`` steps of the
-tick and idles (null-page appends, frozen length) for the rest.
+Every ``PagedEngine`` tick runs at most TWO fused cells: the ragged
+multi-token PREFILL LANE (``prefill_many_paged``: one kernel step appends
+and attends a chunk of up to ``prefill_tokens`` prompt tokens per slot) and
+the DECODE cell (``decode_many_paged``: ``cfg.prefill_chunk`` compiled scan
+steps under a per-step active mask).  The compile universe is exactly those
+two modules, so scheduling freedom lives entirely in the per-slot GRANTS:
 
-The scheduler turns the old all-or-nothing reservation — a slot either got
-its whole chunk's pages or sat out the tick — into packing:
-
+  * PREFILL GRANTS (``prefill_tokens`` > 0) — a slot with unfed prompt
+    tokens is granted a chunk of up to ``prefill_tokens`` of them, served
+    by ONE prefill-lane kernel step instead of one decode step per token
+    (admission latency stops scaling with prompt length).  Grants are
+    PAGE-ALIGNED where possible: a chunk that does not drain the prompt
+    is clipped to end on a page boundary whenever the boundary is
+    reachable, so in the common case mid-prompt chunks never leave a
+    partially written page and a later sharer's copy-on-write boundary
+    coincides with a chunk boundary.  Alignment is a COW-MINIMIZING
+    POLICY, not the safety mechanism: a chunk that cannot reach a
+    boundary (``prefill_tokens`` < page remainder, or a partial grant
+    under pool pressure) and every prompt's final ragged chunk do end
+    mid-page, and correctness then rests — exactly as on the decode
+    path — on ``_grant()`` privatizing every shared block an append
+    would touch BEFORE the tick.
   * PARTIAL GRANTS — a slot whose full chunk does not fit the free list is
-    granted as many steps as its pages allow instead of stalling outright,
-    so prefill keeps streaming through partially-idle chunks;
+    granted as many steps/tokens as its pages allow instead of stalling
+    outright, so prefill keeps streaming through partially-idle chunks;
   * COW PRIVATIZATION — before granting steps that would append into a
     page shared with another slot (refcount > 1), the shared block is
     copy-on-write privatized; if no page is free for the copy the grant is
@@ -20,19 +33,22 @@ its whole chunk's pages or sat out the tick — into packing:
     copies are BATCHED: the per-slot loop only reserves
     (``PagedKVCache.cow_reserve`` — host bookkeeping, fresh page, table
     rewire) and the plan ends with ONE ``cow_flush`` device dispatch for
-    every page the tick privatizes, regardless of how many slots or
-    blocks are involved;
-  * FAIRNESS (``cfg.fairness``) — page-grant order: ``"least-served"``
-    gives pages to the slot with the fewest fresh tokens appended so far
-    (a long prefill cannot starve late joiners), ``"slot-order"`` is the
+    every page the tick privatizes, across BOTH lanes;
+  * FAIRNESS (``cfg.fairness``) — grant order: ``"least-served"`` gives
+    pages to the slot with the fewest fresh tokens appended so far (a
+    long prefill cannot starve late joiners), ``"slot-order"`` is the
     legacy first-fit by slot index;
   * BUDGET (``cfg.tick_budget``) — caps the fresh tokens appended per tick
-    across all slots (0 = uncapped), smoothing page consumption so
-    admissions always find headroom.
+    across all slots and both lanes (0 = uncapped), smoothing page
+    consumption so admissions always find headroom.
+
+With ``prefill_tokens == 0`` (prefill lane disabled) prompts route through
+the decode cell as forced tokens — the legacy prefill-by-decode path, kept
+for measured comparison.
 
 The scheduler owns allocation policy only: it mutates the ``PagedKVCache``
-through ``ensure()`` / ``cow()`` and returns a ``TickPlan``; the engine
-owns the device step and the request lifecycle.
+through ``ensure()`` / ``cow_reserve()`` and returns a ``TickPlan``; the
+engine owns the device steps and the request lifecycle.
 """
 from __future__ import annotations
 
@@ -47,25 +63,32 @@ from repro.serve.cache import PagedKVCache
 @dataclasses.dataclass
 class TickPlan:
     """One tick's work assignment.  The engine uploads ``steps`` (B ints)
-    and the per-step mask is built ON DEVICE; ``active`` is derived lazily
-    for tests/introspection and never materialized on the tick path."""
-    steps: np.ndarray          # (B,) int32 — fused steps granted per slot
-    chunk: int                 # scan steps in the tick's fused cell
-    stalled: int = 0           # active slots that wanted steps but got none
+    for the decode cell (the per-step mask is built ON DEVICE) and
+    ``prefill`` (B ints) alongside the ragged (B, T) token block for the
+    prefill lane; ``active`` is derived lazily for tests/introspection and
+    never materialized on the tick path."""
+    steps: np.ndarray          # (B,) int32 — fused decode steps per slot
+    chunk: int                 # scan steps in the tick's decode cell
+    prefill: np.ndarray = None  # (B,) int32 — prefill-lane tokens per slot
+    stalled: int = 0           # active slots that wanted work but got none
     cow_copies: int = 0        # pages privatized for this tick's appends
+
+    def __post_init__(self):
+        if self.prefill is None:
+            self.prefill = np.zeros_like(self.steps)
 
     @property
     def active(self) -> np.ndarray:
-        """(chunk, B) bool per-step active mask (derived from steps)."""
+        """(chunk, B) bool per-step decode mask (derived from steps)."""
         return np.arange(self.chunk)[:, None] < self.steps[None, :]
 
     @property
     def any_work(self) -> bool:
-        return bool(self.steps.any())
+        return bool(self.steps.any()) or bool(self.prefill.any())
 
 
 class TickScheduler:
-    """Allocates each tick's per-slot step grants (see module docstring)."""
+    """Allocates each tick's per-slot grants (see module docstring)."""
 
     def __init__(self, fairness: str = "least-served", tick_budget: int = 0):
         if fairness not in ("least-served", "slot-order"):
@@ -79,50 +102,75 @@ class TickScheduler:
             return sorted(idx, key=lambda i: (slots[i].served, i))
         return list(idx)
 
-    def plan(self, slots, kv: PagedKVCache, chunk: int) -> TickPlan:
-        """Grant steps slot by slot in fairness order.  For each slot:
-        cap the want at its remaining work (budget + unfed prompt — chunk
+    def _grant(self, kv: PagedKVCache, i: int, length: int, want: int):
+        """Privatize shared blocks the appends would touch, then reserve
+        pages for the largest feasible grant.  COW FIRST, then reserve:
+        privatizing a shared block needs a free page, and ensure()
+        extending the table could consume the last one — COW-before-ensure
+        lets the slot privatize and advance within its existing pages
+        instead of hoarding a fresh page it cannot write past
+        (regression-tested).  Only RESERVED here (host bookkeeping); the
+        one batched device copy for every page the tick privatizes is
+        flushed at the end of the plan.  Returns (granted, cows)."""
+        cows = 0
+        for b in kv.shared_blocks(i, length, length + want):
+            if kv.cow_reserve(i, b):
+                cows += 1
+            else:
+                # no page free for the copy: stop before the shared
+                # block — a shared page is never appended to
+                want = max(0, b * kv.page - length)
+                break
+        for s in range(want, 0, -1):
+            if kv.ensure(i, length + s):
+                return s, cows
+        return 0, cows
+
+    def plan(self, slots, kv: PagedKVCache, chunk: int,
+             prefill_tokens: int = 0) -> TickPlan:
+        """Grant work slot by slot in fairness order.  A slot with unfed
+        prompt tokens gets a PREFILL-LANE grant (page-aligned chunk of up
+        to ``prefill_tokens``); everyone else gets decode steps capped at
+        remaining work (budget + unfed prompt when the lane is off — chunk
         overshoot past the request's last kept token lands on the null
-        page and needs no pages), privatize shared blocks the appends
-        would touch, then reserve pages for the largest feasible grant."""
+        page and needs no pages)."""
         B = len(slots)
         steps = np.zeros((B,), np.int32)
-        budget = self.tick_budget if self.tick_budget > 0 else chunk * B
+        prefill = np.zeros((B,), np.int32)
+        budget = self.tick_budget if self.tick_budget > 0 \
+            else (chunk + prefill_tokens) * B
         stalled = 0
         cows = 0
         for i in self._order(slots):
             slot = slots[i]
             if not slot.active or budget <= 0:
                 continue
+            length = int(kv.length[i])
+            if prefill_tokens > 0 and slot.prompt_left > 0:
+                want = min(prefill_tokens, slot.prompt_left, budget)
+                if want < slot.prompt_left:
+                    # page-aligned chunk: end on a page boundary unless
+                    # the grant cannot even reach one
+                    aligned = want - (length + want) % kv.page
+                    if aligned > 0:
+                        want = aligned
+                granted, c = self._grant(kv, i, length, want)
+                cows += c
+                if granted == 0:
+                    stalled += 1
+                prefill[i] = granted
+                budget -= granted
+                continue
             remaining = len(slot.forced) + slot.budget - len(slot.out)
             want = min(chunk, remaining, budget)
             if want <= 0:
                 continue
-            length = int(kv.length[i])
-            # COW FIRST, then reserve: privatizing a shared block needs a
-            # free page, and ensure() extending the table could consume
-            # the last one — COW-before-ensure lets the slot privatize
-            # and advance within its existing pages instead of hoarding a
-            # fresh page it cannot write past (regression-tested).  Only
-            # RESERVED here (host bookkeeping); the one batched device
-            # copy for every page the tick privatizes is flushed below.
-            for b in kv.shared_blocks(i, length, length + want):
-                if kv.cow_reserve(i, b):
-                    cows += 1
-                else:
-                    # no page free for the copy: stop before the shared
-                    # block — a shared page is never appended to
-                    want = max(0, b * kv.page - length)
-                    break
-            granted = 0
-            for s in range(want, 0, -1):
-                if kv.ensure(i, length + s):
-                    granted = s
-                    break
+            granted, c = self._grant(kv, i, length, want)
+            cows += c
             if granted == 0:
                 stalled += 1
             steps[i] = granted
             budget -= granted
         kv.cow_flush()                  # ONE device copy for the whole tick
-        return TickPlan(steps=steps, chunk=chunk, stalled=stalled,
-                        cow_copies=cows)
+        return TickPlan(steps=steps, chunk=chunk, prefill=prefill,
+                        stalled=stalled, cow_copies=cows)

@@ -232,6 +232,211 @@ def test_multipage_paged_decode_matches_oracle(pps, B, H, KV, D, page,
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# ragged multi-token paged PREFILL kernel vs the jnp gather oracle
+# ---------------------------------------------------------------------------
+
+def _prefill_case(seed, B, T, H, KV, D, page, NB, L, extra_pages=3,
+                  base=None, grants=None):
+    """Random pool + distinct non-null pages per slot + RAGGED chunk
+    geometry: per-slot base lengths (tokens resident before the chunk) and
+    grants (chunk tokens granted, 1..T) drawn so chunks start mid-page and
+    cross page boundaries unless pinned by the caller."""
+    rng = np.random.RandomState(seed)
+    P = B * NB + extra_pages
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (L, P, page, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (L, P, page, KV, D), jnp.float32)
+    tbl = rng.permutation(np.arange(1, P))[:B * NB].reshape(B, NB)
+    if base is None:
+        base = rng.randint(0, NB * page - T + 1, size=B)
+    if grants is None:
+        grants = rng.randint(1, T + 1, size=B)
+    layer = rng.randint(0, L)
+    base = np.asarray(base, np.int32)
+    new = base + np.asarray(grants, np.int32)
+    return (q, kp, vp, jnp.asarray(tbl, jnp.int32), jnp.asarray(base),
+            jnp.asarray(new, jnp.int32), layer)
+
+
+@pytest.mark.parametrize("B,T,H,KV,D,page,NB,L", [
+    (2, 6, 4, 2, 16, 8, 3, 2),    # GQA group 2; T=6 !| page=8
+    (3, 8, 4, 1, 16, 4, 5, 1),    # MQA; chunk spans 2+ pages
+    (1, 5, 8, 8, 32, 8, 4, 3),    # MHA; odd T
+    (2, 7, 6, 2, 32, 16, 2, 2),   # group 3; T !| page
+    (2, 4, 4, 2, 16, 1, 9, 1),    # degenerate single-row pages
+])
+def test_paged_prefill_matches_gather_oracle(B, T, H, KV, D, page, NB, L):
+    """Interpret-mode equivalence of the multi-token prefill kernel vs the
+    jnp gather oracle across GQA/MQA/MHA, ragged per-slot base lengths and
+    grants, chunk sizes not dividing the page, and chunks crossing page
+    boundaries — row-for-row, including rows past a slot's grant."""
+    from repro.kernels.decode_attention.ops import paged_prefill_attention
+    from repro.kernels.decode_attention.ref import paged_prefill_attention_ref
+    args = _prefill_case(B + T + H, B, T, H, KV, D, page, NB, L)
+    got = paged_prefill_attention(*args, interpret=True)
+    want = paged_prefill_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_chunk_crosses_page_boundary():
+    """Pinned geometry: base mid-page, grant spanning three pages — the
+    chunk starts mid-page, fills it, crosses a whole page and ends mid-way
+    into a third; ragged second slot gets a single-token grant."""
+    from repro.kernels.decode_attention.ops import paged_prefill_attention
+    from repro.kernels.decode_attention.ref import paged_prefill_attention_ref
+    args = _prefill_case(7, 2, 8, 4, 2, 16, 4, 4, 1,
+                         base=[3, 5], grants=[8, 1])
+    got = paged_prefill_attention(*args, interpret=True)
+    want = paged_prefill_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_empty_slot_isolated():
+    """A fully EMPTY slot in the batch (base=0, grant=0 — an unoccupied
+    row during a mixed prefill tick) must not perturb any other slot's
+    rows; its own all-masked rows are the ONE documented kernel/oracle
+    divergence (zeros vs a degenerate uniform softmax) and the engine
+    never reads them."""
+    from repro.kernels.decode_attention.ops import paged_prefill_attention
+    from repro.kernels.decode_attention.ref import paged_prefill_attention_ref
+    args = _prefill_case(9, 2, 6, 4, 2, 16, 8, 3, 1,
+                         base=[5, 0], grants=[4, 0])
+    got = paged_prefill_attention(*args, interpret=True)
+    want = paged_prefill_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(want)[0],
+                               rtol=2e-5, atol=2e-5)
+    assert not np.asarray(got)[1].any()         # empty slot: guarded zeros
+
+
+def test_paged_prefill_oracle_matches_dense_causal():
+    """Oracle-of-oracle: hand-pack a contiguous cache into pages; the
+    prefill gather oracle must equal dense causal attention with the same
+    per-slot query offsets and lengths."""
+    from repro.kernels.decode_attention.ref import paged_prefill_attention_ref
+    from repro.models.attention import direct_attention
+    B, T, H, KV, D, page, NB = 2, 5, 4, 2, 16, 8, 3
+    TT = page * NB
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, TT, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, TT, KV, D), jnp.float32)
+    rng = np.random.RandomState(3)
+    P = 1 + B * NB
+    kp = np.zeros((1, P, page, KV, D), np.float32)
+    vp = np.zeros_like(kp)
+    tbl = np.zeros((B, NB), np.int32)
+    pages = 1 + rng.permutation(B * NB)
+    for b in range(B):
+        for j in range(NB):
+            pg = pages[b * NB + j]
+            tbl[b, j] = pg
+            kp[0, pg] = np.asarray(k)[b, j * page:(j + 1) * page]
+            vp[0, pg] = np.asarray(v)[b, j * page:(j + 1) * page]
+    base = jnp.asarray([7, 2], jnp.int32)          # mid-page, ragged
+    new = base + jnp.asarray([5, 3], jnp.int32)
+    got = paged_prefill_attention_ref(q, jnp.asarray(kp), jnp.asarray(vp),
+                                      jnp.asarray(tbl), base, new)
+    want = direct_attention(q, k, v, causal=True, q_offset=base, kv_len=new)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_step_paged_matches_sequential_decode(small_model):
+    """THE lane-equivalence pin: one ragged chunked-prefill step must leave
+    the pool rows, the per-slot lengths AND the last-position logits
+    bit-identical to feeding the same tokens one decode step at a time
+    (the prefill-by-decode path it replaces)."""
+    model, params = small_model
+    B, page, nb, pool, T = 2, 4, 4, 9, 6
+    tbl = np.zeros((B, nb), np.int32)
+    tbl[0] = [1, 2, 3, 4]
+    tbl[1] = [5, 6, 7, 8]
+
+    def fresh():
+        cache = model.init_paged_cache(B, nb, page, pool)
+        return dict(cache, table=jnp.asarray(tbl))
+
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, model.cfg.vocab_size, size=(B, T)).astype(np.int32)
+    grants = np.array([T, 3], np.int32)            # ragged: slot 1 partial
+
+    cache = fresh()
+    logits_seq = [None] * B
+    for t in range(T):
+        act = jnp.asarray([t < grants[0], t < grants[1]])
+        logits, cache = model.decode_step_paged(
+            params, jnp.asarray(toks[:, t:t + 1]), cache, act)
+        for i in range(B):
+            if t == grants[i] - 1:
+                logits_seq[i] = np.asarray(logits[i])
+
+    cache2 = fresh()
+    logits2, cache2 = model.prefill_step_paged(
+        params, jnp.asarray(toks), cache2, jnp.asarray(grants))
+    np.testing.assert_array_equal(np.asarray(cache["length"]),
+                                  np.asarray(cache2["length"]))
+    for i in range(B):
+        np.testing.assert_array_equal(np.asarray(logits2[i]), logits_seq[i])
+    k_seq, k_chunk = np.asarray(cache["k"]), np.asarray(cache2["k"])
+    for i in range(B):
+        for t in range(grants[i]):
+            pg, off = tbl[i, t // page], t % page
+            np.testing.assert_array_equal(k_seq[:, pg, off],
+                                          k_chunk[:, pg, off])
+
+
+@pytest.mark.parametrize("lane", [True, False])
+def test_prefill_lane_token_identical_to_decode_lane(small_model, lane):
+    """The engine's outputs must be byte-for-byte identical with the
+    prefill lane on and off (greedy): the lane changes WHEN prompt rows
+    are appended (chunks vs steps), never WHAT is appended or sampled."""
+    model, params = small_model
+    prompts = _prompts(model, n=4, seed=21)
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=2, max_seq=64, max_new_tokens=5,
+                                 page_size=8, prefill_chunk=3,
+                                 prefill_lane=lane))
+    rids = [pe.submit(p) for p in prompts]
+    res = pe.run()
+    single = ServingEngine(model, params,
+                           ServeConfig(max_batch=1, max_seq=64,
+                                       max_new_tokens=5))
+    for rid, p in zip(rids, prompts):
+        assert res[rid] == single.generate_batch([p])[0], \
+            f"lane={lane} rid={rid}"
+    if lane:
+        assert pe.forced_upload_bytes == 0      # prompts never rode forced
+        assert pe.prefill_upload_bytes > 0
+    else:
+        assert pe.forced_upload_bytes > 0       # legacy path measured
+        assert pe.prefill_upload_bytes == 0
+
+
+def test_prefill_lane_fewer_dispatches_per_prompt(small_model):
+    """The perf-shape claim behind the lane: admitting a P-token prompt
+    costs ceil(P / T) prefill dispatches, not P decode steps.  A 24-token
+    prompt with T=8 must fully drain in 3 prefill-lane ticks."""
+    model, params = small_model
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=24).astype(np.int32)
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=1, max_seq=64, max_new_tokens=2,
+                                 page_size=8, prefill_chunk=2,
+                                 prefill_chunk_tokens=8))
+    pe.submit(prompt)
+    ticks = 0
+    while any(s.active and s.prompt_left for s in pe.slots) or pe.queue:
+        pe.step()
+        ticks += 1
+    assert ticks == 3                       # ceil(24 / 8), not 24 steps
+    assert int(pe.kv.length[0]) == 24       # whole prompt resident
+    assert len(pe.slots[0].out) == 1        # first output sampled in-lane
+
+
 def test_paged_oracle_matches_dense_on_packed_pages():
     """Oracle-of-oracle: hand-pack a contiguous (B, T, KV, D) cache into
     pages; the gather oracle must equal the dense direct attention with the
@@ -352,23 +557,39 @@ def test_paged_outlives_max_seq_token_identical():
 
 def test_paged_zero_recompiles(small_model):
     """The whole engine lifetime — admissions, mid-flight joins, stalls,
-    partial grants, evictions — reuses the TWO compiled decode cells
-    (prefill-in-flight with forced arrays, pure decode without), each
-    compiled exactly once."""
+    partial grants, evictions — reuses the compiled cells, each compiled
+    exactly once.  With the prefill lane ON the universe is the ragged
+    prefill cell + the forced-free decode twin (the forced decode cell
+    never runs: prompt traffic moved to the lane); with the lane OFF it is
+    the legacy pair (forced decode + plain twin)."""
     model, params = small_model
+    rng = np.random.RandomState(2)
+
     pe = PagedEngine(model, params,
                      ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4,
                                  page_size=4, num_pages=13,
                                  prefill_chunk=3))
     if not hasattr(pe._many, "_cache_size"):
         pytest.skip("jit cache-size introspection unavailable")
-    rng = np.random.RandomState(2)
     for n in (3, 7, 5, 9, 4, 6):
         pe.submit(rng.randint(0, model.cfg.vocab_size,
                               size=n).astype(np.int32))
     pe.run()
-    assert pe._many._cache_size() == 1
-    assert pe._many_plain._cache_size() <= 1     # pure-decode twin
+    assert pe._prefill_lane._cache_size() == 1   # ragged prefill cell
+    assert pe._many_plain._cache_size() == 1     # pure-decode twin
+    assert pe._many._cache_size() == 0           # forced cell retired
+
+    pe = PagedEngine(model, params,
+                     ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4,
+                                 page_size=4, num_pages=13,
+                                 prefill_chunk=3, prefill_lane=False))
+    for n in (3, 7, 5, 9, 4, 6):
+        pe.submit(rng.randint(0, model.cfg.vocab_size,
+                              size=n).astype(np.int32))
+    pe.run()
+    assert pe._prefill_lane._cache_size() == 0   # lane off: never compiled
+    assert pe._many._cache_size() == 1           # legacy forced cell
+    assert pe._many_plain._cache_size() <= 1
 
 
 def test_steady_state_tick_uploads_zero_table_bytes(small_model):
@@ -583,6 +804,42 @@ def test_paged_decode_census_scales_with_live_tokens():
     assert d_1024.hbm_bytes > 2 * p_big_pool.hbm_bytes
 
 
+def test_paged_prefill_census_scales_with_chunk_and_live_tokens():
+    """Mirror of ``test_paged_decode_census_scales_with_live_tokens`` for
+    the ragged prefill lane: a prefill step's hbm_bytes scale with CHUNK
+    tokens and LIVE pages (block-table width), never with the pool size —
+    the kernel-level half of the lane's roofline claim.  f32 config: the
+    CPU backend wraps bf16 scatters in full-pool converts that would
+    pollute the traffic model (TPU scatters natively)."""
+    from repro.core.hlo_counters import census_from_compiled
+    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), dtype="float32")
+    model = get_model(cfg)
+    B, page = 2, 16
+
+    def prefill(T, nb, pool):
+        cache = model.abstract_paged_cache(B, nb, page, pool)
+        compiled = jax.jit(
+            lambda p, t, c, g: model.prefill_step_paged(p, t, c, g),
+            donate_argnums=(2,)).lower(
+            model.abstract_params(), jax.ShapeDtypeStruct((B, T), jnp.int32),
+            cache, jax.ShapeDtypeStruct((B,), jnp.int32)).compile()
+        return census_from_compiled(compiled)
+
+    p_small_pool = prefill(8, 2, 33)      # 8-tok chunk, 2 blocks, 512-row pool
+    p_big_pool = prefill(8, 2, 65)        # 8-tok chunk, 2 blocks, 1024-row pool
+    p_more_live = prefill(8, 8, 65)       # 8-tok chunk, 8 blocks
+    p_more_chunk = prefill(32, 8, 65)     # 32-tok chunk, 8 blocks
+
+    # doubling the POOL moves zero extra bytes (chunk scatter + page
+    # gather address only granted rows and live pages)
+    assert p_big_pool.hbm_bytes == p_small_pool.hbm_bytes
+    assert p_big_pool.irregular_bytes == p_small_pool.irregular_bytes
+    # more LIVE blocks move more bytes (the gather grows with the table)
+    assert p_more_live.hbm_bytes > p_big_pool.hbm_bytes
+    # more CHUNK tokens move more bytes (scatter + attention grow with T)
+    assert p_more_chunk.hbm_bytes > 1.5 * p_more_live.hbm_bytes
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_cow_page_copy_census_scales_with_pages(dtype):
     """The COW page copy's census bytes scale with the pages COPIED, never
@@ -655,13 +912,20 @@ def test_cow_bytes_zero_without_shared_writes(small_model):
                                            size=n).astype(np.int32)])
                for n in (3, 6, 2, 5)]
     for sharing in (False, True):
+        # prefill chunk pinned to one page so prompt drains stay slow
+        # enough for request lifetimes to overlap (sharing needs a donor
+        # still LIVE when the next request is admitted)
         pe = PagedEngine(model, params,
                          ServeConfig(max_batch=2, max_seq=32,
                                      max_new_tokens=3, page_size=4,
                                      prefill_chunk=3,
+                                     prefill_chunk_tokens=4,
                                      prefix_sharing=sharing))
-        for p in prompts:
-            pe.submit(p)
+        # budgets staggered too: equal budgets + equal chunked-prefill
+        # tick counts would finish both donors in the same tick, leaving
+        # no live donor for the later admissions
+        for j, p in enumerate(prompts):
+            pe.submit(p, 3 + 2 * (j % 2))
         pe.run()
         if sharing:
             assert pe.shared_tokens > 0

@@ -116,19 +116,24 @@ def _assert_shared_frozen(pe, before):
 
 def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
                    n_requests: int, *, max_batch=3, page_size=4,
-                   prefill_chunk=3, defrag_every=0, prefixes=(),
+                   prefill_chunk=3, prefill_lane=True,
+                   prefill_chunk_tokens=0, defrag_every=0, prefixes=(),
                    check_frozen=False) -> dict:
     """One randomized schedule; returns engine stats.  Asserts the
     refcount/free-list invariants every tick and oracle token-identity at
     the end.  ``prefixes``: pool of common prompt prefixes — when set,
-    every prompt is prefix + short suffix, exercising sharing and COW."""
+    every prompt is prefix + short suffix, exercising sharing and COW.
+    The ragged prefill lane is ON by default (the production path);
+    ``prefill_lane=False`` fuzzes the legacy prefill-by-decode route."""
     rng = np.random.RandomState(seed)
     cfg = model.cfg
     pe = PagedEngine(model, params,
                      ServeConfig(max_batch=max_batch, max_seq=48,
                                  max_new_tokens=max(BUDGETS),
                                  page_size=page_size,
-                                 prefill_chunk=prefill_chunk))
+                                 prefill_chunk=prefill_chunk,
+                                 prefill_lane=prefill_lane,
+                                 prefill_chunk_tokens=prefill_chunk_tokens))
     submitted = {}
 
     def make_prompt():
@@ -238,6 +243,28 @@ def test_fuzz_single_slot_chunked(harness):
     model, params, oracle = harness
     _fuzz_schedule(model, params, oracle, seed=7, min_ticks=20,
                    n_requests=6, max_batch=1, prefill_chunk=6)
+
+
+def test_fuzz_prefill_lane_odd_chunk(harness):
+    """Prefill-lane chunk NOT dividing the page (T=5, page=4): every
+    mid-prompt chunk is clipped to a page boundary and the final chunk
+    carries the ragged tail — outputs must stay oracle-identical with the
+    refcount invariants intact every tick."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(500)
+    prefixes = (rng.randint(0, model.cfg.vocab_size,
+                            size=6).astype(np.int32),)
+    _fuzz_schedule(model, params, oracle, seed=13, min_ticks=30,
+                   n_requests=8, prefill_chunk_tokens=5, prefixes=prefixes)
+
+
+def test_fuzz_legacy_prefill_by_decode(harness):
+    """REGRESSION: the legacy forced-token route (lane off) must keep its
+    guarantees — it is the measured baseline the lane is gated against."""
+    model, params, oracle = harness
+    stats = _fuzz_schedule(model, params, oracle, seed=17, min_ticks=25,
+                           n_requests=6, prefill_lane=False)
+    assert stats["ticks"] >= 25
 
 
 def test_fuzz_page_size_one(harness):
@@ -360,6 +387,75 @@ def test_scheduler_partial_grant_budget_fairness(harness):
     assert list(plan.steps) == [4, 1]
 
 
+def test_scheduler_prefill_grants_page_aligned(harness):
+    """Prefill-lane grants: a chunk that does not drain the prompt is
+    clipped to end on a PAGE BOUNDARY (appends never leave a partially
+    written page mid-prompt); the final chunk keeps its ragged tail; a
+    slot whose prompt has drained gets decode steps instead; the tick
+    budget caps both lanes together."""
+    from repro.serve.cache import PagedKVCache
+    from repro.serve.engine import _Slot
+    from repro.serve.scheduler import TickScheduler
+    model, params, _ = harness
+
+    def slot(prompt_left, forced_n=None, budget=3, served=0):
+        n = prompt_left - 1 if forced_n is None else forced_n
+        return _Slot(rid=0, forced=list(range(max(0, n))), budget=budget,
+                     served=served, prompt_left=prompt_left, active=True)
+
+    # mid-prompt chunk clipped to the page boundary: T=6, page=4, base=0,
+    # prompt_left=20 -> grant 4 (not 6); a draining chunk keeps its tail:
+    # prompt_left=5 <= T -> grant 5
+    kv = PagedKVCache(model, 2, 32, page_size=4, num_pages=20)
+    plan = TickScheduler().plan([slot(20), slot(5)], kv, chunk=3,
+                                prefill_tokens=6)
+    assert list(plan.prefill) == [4, 5]
+    assert list(plan.steps) == [0, 0]           # no decode while prefilling
+    assert plan.any_work
+
+    # base mid-page (prefix share at 2 tokens): the clip lands the chunk
+    # end on the boundary — T=5 from base 2 would end at 7 mid-page, so
+    # the grant clips to 2 (base+grant = 4 = one page); with T=6 the
+    # un-clipped end (8) is already a boundary and the full 6 is granted
+    for T, want in ((5, 2), (6, 6)):
+        kv = PagedKVCache(model, 1, 32, page_size=4, num_pages=20)
+        assert kv.ensure(0, 2)
+        kv.length[0] = 2
+        plan = TickScheduler().plan([slot(20)], kv, chunk=3,
+                                    prefill_tokens=T)
+        assert list(plan.prefill) == [want], T
+
+    # drained prompt -> decode lane; budget caps prefill + decode together
+    kv = PagedKVCache(model, 2, 32, page_size=4, num_pages=20)
+    plan = TickScheduler(tick_budget=5).plan(
+        [slot(8), slot(0, forced_n=0)], kv, chunk=3, prefill_tokens=4)
+    assert int(plan.prefill.sum()) + int(plan.steps.sum()) == 5
+    assert list(plan.prefill) == [4, 0]
+    assert list(plan.steps) == [0, 1]
+
+    # prefill_tokens=0 (lane off): prompts ride the decode cell as before
+    kv = PagedKVCache(model, 1, 32, page_size=4, num_pages=20)
+    plan = TickScheduler().plan([slot(20)], kv, chunk=3, prefill_tokens=0)
+    assert list(plan.prefill) == [0]
+    assert list(plan.steps) == [3]
+
+
+def test_scheduler_prefill_partial_grant_under_pool_pressure(harness):
+    """A prefill chunk that does not fit the free list is granted the
+    largest feasible prefix (alignment yields to pool pressure) instead of
+    stalling outright."""
+    from repro.serve.cache import PagedKVCache
+    from repro.serve.engine import _Slot
+    from repro.serve.scheduler import TickScheduler
+    model, params, _ = harness
+    kv = PagedKVCache(model, 1, 32, page_size=4, num_pages=2)  # 1 page free
+    s = _Slot(rid=0, forced=list(range(15)), budget=3, prompt_left=16,
+              active=True)
+    plan = TickScheduler().plan([s], kv, chunk=3, prefill_tokens=12)
+    assert list(plan.prefill) == [4]            # one page's worth
+    assert plan.stalled == 0
+
+
 def test_scheduler_cow_before_ensure(harness):
     """REGRESSION: with ONE free page and an append landing in a shared
     partial page, the scheduler must spend the page on the COW copy (and
@@ -472,8 +568,10 @@ def test_cow_preserves_shared_rows(harness):
     bit-identical afterwards — the surviving owner may only have written
     rows past the shared prefix."""
     model, params, oracle = harness
+    # prefill chunk pinned to 2 tokens so the donor's first tick leaves a
+    # PARTIAL page for the sharer to reference
     sc = ServeConfig(max_batch=2, max_seq=32, max_new_tokens=4, page_size=4,
-                     prefill_chunk=2)
+                     prefill_chunk=2, prefill_chunk_tokens=2)
     pe = PagedEngine(model, params, sc)
     rng = np.random.RandomState(17)
     prompt = rng.randint(0, model.cfg.vocab_size, size=6).astype(np.int32)
