@@ -11,20 +11,26 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 TOL="${TOL:-0.4}"
+# every step runs under a hard wall-clock cap: a wedged engine (the exact
+# failure mode the overload harness guards) must FAIL the gate, not hang
+# CI.  The in-process pytest watchdog (tests/conftest.py) fires first with
+# per-test stacks; this is the outer belt-and-suspenders.
+STEP_TIMEOUT="${STEP_TIMEOUT:-3600}"
+run_capped() { timeout -k 30 "$STEP_TIMEOUT" "$@"; }
 
-echo "[verify] tier-1 pytest"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+echo "[verify] tier-1 pytest (capped at ${STEP_TIMEOUT}s/step)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} run_capped python -m pytest -x -q
 
 echo "[verify] committed BENCH_serve.json baseline"
 git show HEAD:BENCH_serve.json > /tmp/bench_baseline.json
 
 echo "[verify] CPU smoke serve_bench (all scenarios)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/serve_bench.py --json --scenario all
+    run_capped python benchmarks/serve_bench.py --json --scenario all
 
 echo "[verify] HLO census throughput"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/census_bench.py --json
+    run_capped python benchmarks/census_bench.py --json
 
 echo "[verify] tokens/s regression check (tolerance ${TOL})"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - "$TOL" <<'EOF'
@@ -58,6 +64,7 @@ GATED = [
     "shared_prefix.shared_logical_physical_ratio",
     "long_decode.long_decode_tokens_per_s",
     "long_prompt.long_prompt_tokens_per_s_lane",
+    "overload.overload_goodput_tokens_per_s",
     "census.lines_per_s",
 ]
 # per-tick overheads must not climb above ceiling x committed — the
@@ -129,6 +136,40 @@ if fb is not None and fb != 0:
     print(f"  [REGRESSION] prefill-lane forced_upload_bytes {fb:.0f} != 0 "
           f"(prompt traffic leaked back onto the forced decode path)")
     failed.append("long_prompt_forced_upload_zero")
+# overload safety (acceptance criteria): a 4x-oversubscribed bursty
+# workload must complete with ZERO crashed ticks (the pre-overload engine
+# raised "page pool exhausted" here), at least one preemption (else the
+# scenario is not actually exercising the preempt-and-recompute path),
+# every request at a typed terminal status, and a bounded recompute tax
+# (measured ~0.11 of all appended tokens; the 0.60 ceiling catches a
+# thrashing victim policy without flaking on schedule jitter)
+ct = get(new, "overload.overload_crashed_ticks")
+if ct is not None and ct != 0:
+    print(f"  [REGRESSION] overload crashed_ticks {ct:.0f} != 0 "
+          f"(engine.step() raised under an admissible overload schedule)")
+    failed.append("overload_crashed_ticks_zero")
+pre = get(new, "overload.overload_preemptions")
+if pre is not None and pre < 1:
+    print(f"  [REGRESSION] overload preemptions {pre:.0f} < 1 "
+          f"(the overload scenario never wedged the pool — not a test)")
+    failed.append("overload_preemptions_floor")
+at = get(new, "overload.overload_all_terminal")
+if at is not None and at != 1:
+    print(f"  [REGRESSION] overload all_terminal {at:.0f} != 1 "
+          f"(a request leaked out of the lifecycle without a terminal "
+          f"status)")
+    failed.append("overload_all_terminal")
+rf = get(new, "overload.overload_recompute_fraction")
+if rf is not None and rf > 0.60:
+    print(f"  [REGRESSION] overload recompute fraction {rf:.2f} > 0.60 "
+          f"(preemption is thrashing: most appended K/V rows are "
+          f"recomputed work)")
+    failed.append("overload_recompute_ceiling")
+gp = get(new, "overload.overload_goodput_tokens_per_s")
+if gp is not None and gp < 250:
+    print(f"  [REGRESSION] overload goodput {gp:.1f} tok/s < 250 "
+          f"(completed-request throughput collapsed under overload)")
+    failed.append("overload_goodput_floor")
 
 if failed:
     print(f"[verify] FAILED: {failed}")

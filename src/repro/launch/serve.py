@@ -44,6 +44,29 @@ def main() -> int:
                          "swept per grid step (cuts grid steps by P for "
                          "long slots; only meaningful with the pallas "
                          "attention impl)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission: reject submits once this many "
+                         "requests are waiting (0 = unbounded); rejected "
+                         "requests get a typed REJECTED status, never an "
+                         "engine crash")
+    ap.add_argument("--deadline-ticks", type=int, default=0,
+                    help="per-request tick deadline (0 = none): a request "
+                         "still unfinished this many engine ticks after "
+                         "submit is retired DEADLINE_EXCEEDED with its "
+                         "partial output")
+    ap.add_argument("--preempt-policy", default="fewest-tokens",
+                    choices=("fewest-tokens", "most-pages"),
+                    help="victim choice when the page pool wedges: evict "
+                         "the request with the fewest generated tokens "
+                         "(least recompute work lost) or the one holding "
+                         "the most pages (frees the most pool per "
+                         "eviction); preempted requests requeue and "
+                         "recompute to a token-identical result")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable preempt-and-recompute: a wedged page "
+                         "pool raises 'page pool exhausted' (the "
+                         "pre-overload-safety behavior, kept for measured "
+                         "comparison)")
     ap.add_argument("--sys-prompt-tokens", type=int, default=16,
                     help="shared system-prompt length for the demo "
                          "workload; keep it a MULTIPLE of --page-size — a "
@@ -62,6 +85,20 @@ def main() -> int:
                  "step)")
     if args.prefill_chunk_tokens < 0:
         ap.error("--prefill-chunk-tokens must be >= 0 (0 = auto)")
+    if args.max_queue < 0:
+        ap.error("--max-queue must be >= 0 (0 = unbounded admission)")
+    if args.deadline_ticks < 0:
+        ap.error("--deadline-ticks must be >= 0 (0 = no deadline)")
+    if args.deadline_ticks and args.deadline_ticks < args.new_tokens:
+        print(f"[launch.serve] NOTE: --deadline-ticks "
+              f"({args.deadline_ticks}) is below --new-tokens "
+              f"({args.new_tokens}) — a decode tick emits at most one "
+              f"token per request, so most requests will retire "
+              f"DEADLINE_EXCEEDED with partial output")
+    if args.no_preempt and args.max_queue == 0:
+        print("[launch.serve] NOTE: --no-preempt with unbounded admission "
+              "restores the crashing overload behavior — an oversubscribed "
+              "pool raises 'page pool exhausted' instead of preempting")
     if not args.no_prefill_lane and args.prefill_chunk_tokens % args.page_size:
         print(f"[launch.serve] NOTE: --prefill-chunk-tokens "
               f"({args.prefill_chunk_tokens}) is not a multiple of "
@@ -105,7 +142,11 @@ def main() -> int:
                        prefill_chunk=args.prefill_chunk,
                        prefill_lane=not args.no_prefill_lane,
                        prefill_chunk_tokens=args.prefill_chunk_tokens,
-                       prefix_sharing=not args.no_prefix_sharing)
+                       prefix_sharing=not args.no_prefix_sharing,
+                       preempt=not args.no_preempt,
+                       preempt_policy=args.preempt_policy,
+                       max_queue=args.max_queue,
+                       deadline_ticks=args.deadline_ticks)
     rng = np.random.RandomState(0)
 
     if args.whole_batch:
@@ -143,6 +184,14 @@ def main() -> int:
           f"{engine.kv.cow_copies} COW copies), page util "
           f"mean={np.mean(util) if util else 0:.2f} "
           f"max={np.max(util) if util else 0:.2f}")
+    from repro.serve.engine import RequestStatus
+    n_status = {s.value: sum(1 for r in rids if engine.status[r] == s)
+                for s in RequestStatus}
+    print(f"[launch.serve] overload: {engine.preemptions} preemptions "
+          f"({engine.recompute_tokens} recomputed tokens), "
+          f"{engine.rejected} rejected, "
+          f"{engine.deadline_exceeded} deadline-exceeded; statuses "
+          + ", ".join(f"{k}={v}" for k, v in n_status.items() if v))
     return 0
 
 

@@ -1,4 +1,6 @@
 from repro.serve.cache import PagedKVCache  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
-    PagedEngine, Request, ServeConfig, ServingEngine)
+    PagedEngine, Request, RequestStatus, ServeConfig, ServingEngine,
+    TERMINAL_STATUSES)
+from repro.serve.faults import FaultEvent, FaultPlan  # noqa: F401
 from repro.serve.scheduler import TickPlan, TickScheduler  # noqa: F401

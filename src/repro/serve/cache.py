@@ -88,9 +88,17 @@ class PagedKVCache:
         self.cow_bytes = 0
         self.cow_dispatches = 0          # device copy calls (1 per flush)
         self.shared_pages = 0            # share() page references handed out
-        # (dst, src) page pairs reserved by cow_reserve() awaiting the one
-        # batched device copy of the tick (cow_flush)
-        self._pending_cow: List[Tuple[int, int]] = []
+        # (dst, src, slot, blk) page pairs reserved by cow_reserve()
+        # awaiting the one batched device copy of the tick (cow_flush);
+        # slot/blk tag each pair so a reservation can be rolled back
+        # (cow_rollback) or cancelled when its slot is freed mid-tick
+        # (free_slot) without orphaning a pending copy into a free page
+        self._pending_cow: List[Tuple[int, int, int, int]] = []
+        # pages temporarily seized from the free list by the fault-
+        # injection harness (serve/faults.py pool-pressure events): not
+        # allocatable, not referenced — check() accounts for them so the
+        # pool partition invariant survives injected pressure
+        self.seized: Set[int] = set()
         # slot rows whose table/length changed since the engine last synced
         # its device mirrors (admission, COW, eviction, defrag mark these;
         # the engine uploads ONLY these rows, then clears the set)
@@ -154,7 +162,7 @@ class PagedKVCache:
         if not self.free:
             return False
         q = self.free.pop()
-        self._pending_cow.append((q, pg))
+        self._pending_cow.append((q, pg, i, blk))
         self.refcount[pg] -= 1
         self.refcount[q] = 1
         self.owned[i][blk] = q
@@ -176,13 +184,41 @@ class PagedKVCache:
         Returns the pages copied."""
         if not self._pending_cow:
             return 0
-        dst = jnp.asarray([d for d, _ in self._pending_cow], jnp.int32)
-        src = jnp.asarray([s for _, s in self._pending_cow], jnp.int32)
+        dst = jnp.asarray([p[0] for p in self._pending_cow], jnp.int32)
+        src = jnp.asarray([p[1] for p in self._pending_cow], jnp.int32)
         self.k, self.v = self._copy(self.k, self.v, dst, src)
         n = len(self._pending_cow)
         self._pending_cow.clear()
         self.cow_dispatches += 1
         return n
+
+    def cow_rollback(self, i: int, from_blk: int = 0) -> int:
+        """Undo slot ``i``'s PENDING copy-on-write reservations at block
+        indices >= ``from_blk``: the shared mapping is restored (source
+        refcount bumped back, table/owned rewired to the original page)
+        and the reserved destination page returns to the free list before
+        any device copy was issued.  The scheduler calls this when a grant
+        shrinks below a block it already reserved — under pool pressure
+        the reserved page must go to a slot that can actually advance, not
+        sit privatized ahead of an append that will never reach it.
+        Returns the number of reservations undone."""
+        kept, undone = [], 0
+        for (q, pg, s, b) in self._pending_cow:
+            if s == i and b >= from_blk:
+                self.refcount[pg] += 1
+                self.refcount[q] = 0
+                self.free.append(q)
+                self.owned[i][b] = pg
+                self.table[i, b] = pg
+                self.cow_copies -= 1
+                self.cow_bytes -= self.page_bytes
+                undone += 1
+            else:
+                kept.append((q, pg, s, b))
+        self._pending_cow = kept
+        if undone:
+            self.dirty.add(i)
+        return undone
 
     def cow_many(self, items: Iterable[Tuple[int, int]]) -> int:
         """Batched copy-on-write: privatize ALL shared (slot, blk) pairs in
@@ -223,10 +259,34 @@ class PagedKVCache:
         return [b for b in range(b0, min(b1, len(self.owned[i]) - 1) + 1)
                 if self.refcount[self.owned[i][b]] > 1]
 
+    def seize_pages(self, n: int) -> List[int]:
+        """Fault injection (pool pressure): remove up to ``n`` pages from
+        the free list into the SEIZED set — temporarily unallocatable, as
+        if another tenant grabbed them.  ``check()`` accounts for seized
+        pages, so every invariant keeps holding under injected pressure.
+        Returns the seized page ids (pass them back to
+        ``release_pages``)."""
+        took = [self.free.pop() for _ in range(min(n, len(self.free)))]
+        self.seized.update(took)
+        return took
+
+    def release_pages(self, pages: Iterable[int]) -> None:
+        """Return previously seized pages to the free list."""
+        for pg in pages:
+            assert pg in self.seized, f"page {pg} was not seized"
+            self.seized.discard(pg)
+            self.free.append(pg)
+
     def free_slot(self, i: int) -> None:
         """Eviction: drop slot ``i``'s references; pages whose refcount
         reaches zero go back to the free list (a page another slot still
-        references stays live)."""
+        references stays live).  Any PENDING copy-on-write reservation
+        the slot holds is cancelled first (rolled back, not flushed):
+        preemption/cancellation can free a slot mid-tick, and a pending
+        copy into a page that just returned to the free list would
+        corrupt whoever allocates it next (regression + fuzz pinned)."""
+        if self._pending_cow:
+            self.cow_rollback(i)
         for pg in reversed(self.owned[i]):
             self.refcount[pg] -= 1
             if self.refcount[pg] == 0:
@@ -269,10 +329,26 @@ class PagedKVCache:
                 fill[pg] = max(fill.get(pg, 0), f)
         return sum(fill.values()) / rows if rows else 0.0
 
-    def check(self) -> None:
+    def check(self, allow_pending: bool = False) -> None:
         """Refcount/free-list/table invariants (cheap; the property harness
-        calls this every fuzz step)."""
-        assert not self._pending_cow, "unflushed COW reservations"
+        calls this every fuzz step).  ``allow_pending=True`` checks the
+        MID-PLAN state (reservations made, flush not yet issued): pending
+        pairs must reference live pages only — a pending copy into or out
+        of a free page is exactly the corruption ``free_slot``'s
+        cancellation and ``cow_rollback`` exist to prevent."""
+        if allow_pending:
+            free = set(self.free)
+            for (q, pg, s, b) in self._pending_cow:
+                assert q not in free and pg not in free, \
+                    f"pending COW ({q} <- {pg}) references a free page"
+                assert self.refcount[q] == 1, \
+                    f"pending COW destination {q} has refcount " \
+                    f"{self.refcount[q]}"
+                assert 0 <= b < len(self.owned[s]) \
+                    and self.owned[s][b] == q, \
+                    f"pending COW for slot {s} block {b} lost its rewire"
+        else:
+            assert not self._pending_cow, "unflushed COW reservations"
         refs = Counter(p for o in self.owned for p in o)
         assert 0 not in refs, "null page referenced"
         for i, o in enumerate(self.owned):
@@ -285,8 +361,10 @@ class PagedKVCache:
                 f"{refs.get(p, 0)} table references"
         assert len(set(self.free)) == len(self.free), "free-list duplicate"
         assert not set(refs) & set(self.free), "page both referenced and free"
-        assert set(refs) | set(self.free) == set(range(1, self.num_pages)), \
-            "page leaked"
+        assert not self.seized & set(refs), "seized page still referenced"
+        assert not self.seized & set(self.free), "seized page still free"
+        assert set(refs) | set(self.free) | self.seized \
+            == set(range(1, self.num_pages)), "page leaked"
 
     # -- defrag ----------------------------------------------------------------
 

@@ -57,8 +57,9 @@ what launch/serve.py lowers for the production mesh.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -106,15 +107,54 @@ class ServeConfig:
                                       # upload traces (cheap scalars, but
                                       # unbounded — a long-lived server
                                       # disables them; counters stay on)
+    # --- overload safety (preemption / admission / fault tolerance) ---------
+    preempt: bool = True              # preempt-and-recompute when no slot
+                                      # can get step capacity; False keeps
+                                      # the legacy pool-exhausted raise
+                                      # (measured/regression baseline only)
+    preempt_policy: str = "fewest-tokens"  # victim selection (scheduler:
+                                      # "fewest-tokens" | "most-pages")
+    max_queue: int = 0                # submit() queue-depth bound (0:
+                                      # unbounded); overflow -> REJECTED
+    deadline_ticks: int = 0           # default per-request tick budget
+                                      # (0: no deadline); overrun ->
+                                      # DEADLINE_EXCEEDED with partial output
+    quarantine_ticks: int = 2         # ticks a slot sits out after emitting
+                                      # a poisoned (out-of-vocab) token
+
+
+class RequestStatus(enum.Enum):
+    """Request lifecycle.  Every submitted rid ends in a TERMINAL status —
+    overload shows up as typed outcomes (REJECTED / DEADLINE_EXCEEDED /
+    PREEMPTED_RESUMED), never as a hang or an engine raise."""
+    QUEUED = "queued"                  # waiting for a slot (incl. requeued)
+    RUNNING = "running"                # occupies a slot
+    FINISHED = "finished"              # completed, never preempted
+    PREEMPTED_RESUMED = "preempted_resumed"  # completed after >= 1 preemption
+    REJECTED = "rejected"              # failed admission at submit()
+    CANCELLED = "cancelled"            # explicit cancel(); partial output kept
+    DEADLINE_EXCEEDED = "deadline_exceeded"  # tick budget ran out
+
+
+TERMINAL_STATUSES = frozenset({
+    RequestStatus.FINISHED, RequestStatus.PREEMPTED_RESUMED,
+    RequestStatus.REJECTED, RequestStatus.CANCELLED,
+    RequestStatus.DEADLINE_EXCEEDED})
 
 
 @dataclasses.dataclass
 class Request:
+    """One submitted request.  ``prompt`` is the ORIGINAL prompt and never
+    changes; ``emitted`` accumulates output tokens across preemptions (on
+    re-admission they are replayed as forced prompt through the prefill
+    lane, so the resumed request is token-identical to an uninterrupted
+    run); ``max_new_tokens`` is the TOTAL output budget across resumes."""
     rid: int
     prompt: np.ndarray                # (S,) int32
     max_new_tokens: int
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    deadline_tick: int = -1           # absolute engine tick; -1 = none
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    preempts: int = 0                 # times this request lost its slot
 
 
 class ServingEngine:
@@ -287,34 +327,6 @@ class _Slot:
     active: bool = False
 
 
-class _SlotQueueBase:
-    """Request lifecycle for slot-scheduled engines: submission queue, rid
-    assignment, drain loop.  Subclasses provide ``step()`` and initialize
-    ``cfg``, ``queue``, ``slots``, ``results`` and ``_next_rid``."""
-
-    def submit(self, prompt: np.ndarray,
-               max_new_tokens: Optional[int] = None) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.size == 0:
-            raise ValueError("empty prompt: a slot needs at least one "
-                             "token to feed the decode step")
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, prompt,
-                                  max_new_tokens or self.cfg.max_new_tokens))
-        return rid
-
-    @property
-    def busy(self) -> bool:
-        return bool(self.queue) or any(s.active for s in self.slots)
-
-    def run(self) -> Dict[int, List[int]]:
-        """Drain queue + slots; returns {rid: generated tokens}."""
-        while self.busy:
-            self.step()
-        return self.results
-
-
 def _lcp(a: List[int], b: List[int]) -> int:
     n = 0
     for x, y in zip(a, b):
@@ -393,7 +405,7 @@ class _PrefixIndex:
         return donor, best
 
 
-class PagedEngine(_SlotQueueBase):
+class PagedEngine:
     """Non-lockstep continuous batching over the paged KV cache.
 
     Every engine tick runs at most TWO fused cells planned by the
@@ -436,6 +448,21 @@ class PagedEngine(_SlotQueueBase):
     shared pages), finished slots' references are dropped on finish, a
     slot that cannot get capacity STALLS until eviction frees pages, and
     ``defrag()`` compacts the pool.
+
+    OVERLOAD SAFETY: the engine survives any admissible load by
+    construction.  ``submit()`` validates capacity and queue depth (typed
+    ``REJECTED``, never a stall), every request carries an optional tick
+    deadline and ends in a typed terminal ``RequestStatus``, and a tick
+    where NO slot can get step capacity preempts victims (fewest tokens
+    generated, then most pages held) instead of raising — the victim
+    requeues with its emitted output as forced prompt, recomputes through
+    the ragged prefill lane, and finishes token-identical to an
+    uninterrupted run (``PREEMPTED_RESUMED``).  A seeded ``FaultPlan``
+    (serve/faults.py) can inject pool pressure, forced evictions, dropped
+    grants and poisoned logits; the always-on out-of-vocab output guard
+    quarantines a poisoned slot and requeues its request.  The legacy
+    pool-exhausted ``RuntimeError`` survives only behind
+    ``preempt=False``.
 
     Decoder-only attention LMs only (a joining SSM slot would inherit the
     previous occupant's state; whisper needs per-request cross caches).
@@ -511,7 +538,8 @@ class PagedEngine(_SlotQueueBase):
             self.kv.warm_copy(tuple(range(1, min(bound, 8) + 1)))
         self._pindex = _PrefixIndex()
         self.scheduler = TickScheduler(fairness=cfg.fairness,
-                                       tick_budget=cfg.tick_budget)
+                                       tick_budget=cfg.tick_budget,
+                                       preempt_policy=cfg.preempt_policy)
         self.key = jax.random.key(cfg.seed)
         self.slots = [_Slot() for _ in range(B)]
         self.queue: List[Request] = []
@@ -519,6 +547,27 @@ class PagedEngine(_SlotQueueBase):
         self._feed = np.full((B,), cfg.pad_id, np.int32)
         self._next_rid = 0
         self.steps_run = 0                # engine ticks (chunks)
+        # --- request lifecycle / overload state --------------------------
+        self.ticks = 0                    # step() calls, incl. idle ticks
+                                          # (the deadline / fault clock)
+        self._idle = 0                    # consecutive no-work busy ticks
+        self._reqs: Dict[int, Request] = {}
+        self.status: Dict[int, RequestStatus] = {}
+        self.reject_reason: Dict[int, str] = {}
+        self.preemptions = 0              # capacity preemptions + forced
+                                          # evictions (fault-injected)
+        self.recompute_tokens = 0         # tokens re-appended on resume
+        self.rejected = 0
+        self.cancelled = 0
+        self.deadline_exceeded = 0
+        self.quarantines = 0              # poison-triggered slot requeues
+        self.dropped_grants = 0           # granted tokens a fault dropped
+        self.fault_counts: Dict[str, int] = {}
+        self._quarantined: Dict[int, int] = {}  # slot -> usable-again tick
+        self._squeezed: List[Tuple[int, List[int]]] = []  # (release, pages)
+        self._faults = None               # armed serve/faults.py FaultPlan
+        self._drop_slots: Set[int] = set()
+        self._poison_slots: Set[int] = set()
         self.tokens_out = 0               # kept (non-discarded) tokens
         self.tokens_appended = 0          # fresh K/V rows written (physical)
         self.shared_tokens = 0            # prompt tokens served by reference
@@ -540,6 +589,197 @@ class PagedEngine(_SlotQueueBase):
         self.upload_trace: List[int] = []        # bytes uploaded per tick
 
     # -- request lifecycle -----------------------------------------------------
+
+    def _admissible(self, prompt: np.ndarray, mnt: int) -> Optional[str]:
+        """None if the request can complete on this engine; otherwise the
+        typed rejection reason.  Validated at submit() — an inadmissible
+        request used to stall forever or raise deep inside a tick."""
+        total = int(prompt.size) + mnt
+        blocks = -(-total // self.kv.page)
+        if blocks > self.kv.max_blocks:
+            return (f"prompt+output needs {blocks} blocks > max_blocks="
+                    f"{self.kv.max_blocks} (max_seq={self.cfg.max_seq})")
+        if blocks > self.kv.num_pages - 1:
+            return (f"prompt+output needs {blocks} blocks > pool of "
+                    f"{self.kv.num_pages - 1} allocatable pages")
+        if self.cfg.max_queue > 0 and len(self.queue) >= self.cfg.max_queue:
+            return f"queue full ({self.cfg.max_queue} requests waiting)"
+        return None
+
+    def submit(self, prompt: np.ndarray,
+               max_new_tokens: Optional[int] = None,
+               deadline_ticks: Optional[int] = None) -> int:
+        """Queue a request.  Admission is BOUNDED: a prompt+output that can
+        never fit the slot table or the page pool, or a submit past
+        ``max_queue`` depth, gets a typed ``REJECTED`` status (reason in
+        ``reject_reason[rid]``) instead of a stall or a deep-tick raise.
+        ``deadline_ticks`` (default ``cfg.deadline_ticks``; 0 = none)
+        bounds the engine ticks the request may stay live."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt: a slot needs at least one "
+                             "token to feed the decode step")
+        rid = self._next_rid
+        self._next_rid += 1
+        mnt = max_new_tokens or self.cfg.max_new_tokens
+        reason = self._admissible(prompt, mnt)
+        if reason is not None:
+            self.status[rid] = RequestStatus.REJECTED
+            self.reject_reason[rid] = reason
+            self.results[rid] = []
+            self.rejected += 1
+            return rid
+        dl = self.cfg.deadline_ticks if deadline_ticks is None \
+            else deadline_ticks
+        req = Request(rid, prompt, mnt,
+                      deadline_tick=self.ticks + dl if dl > 0 else -1)
+        self._reqs[rid] = req
+        self.status[rid] = RequestStatus.QUEUED
+        self.queue.append(req)
+        return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or running request: partial output is kept in
+        ``results[rid]``, status becomes ``CANCELLED``, slot/pages are
+        released.  False if the rid is unknown or already terminal."""
+        st = self.status.get(rid)
+        if st is None or st in TERMINAL_STATUSES:
+            return False
+        req = self._reqs[rid]
+        if st is RequestStatus.QUEUED:
+            self.queue.remove(req)
+        else:
+            i = next((j for j, s in enumerate(self.slots)
+                      if s.active and s.rid == rid), -1)
+            if i >= 0:
+                req.emitted.extend(self.slots[i].out)
+                self._release_slot(i)
+        self.results[rid] = list(req.emitted)
+        self.status[rid] = RequestStatus.CANCELLED
+        self.cancelled += 1
+        return True
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain queue + slots; returns {rid: generated tokens}."""
+        while self.busy:
+            self.step()
+        return self.results
+
+    # -- fault injection (serve/faults.py) --------------------------------------
+
+    def install_faults(self, plan) -> None:
+        """Arm a ``FaultPlan``; its events fire at the top of their tick.
+        Squeezed pages auto-release when their duration elapses (``step()``
+        keeps processing releases even while idle, so a squeeze can starve
+        ticks but never deadlock the engine)."""
+        self._faults = plan
+
+    def _apply_faults(self) -> None:
+        now = self.ticks
+        if self._squeezed:                # releases first: a squeeze never
+            keep = []                     # outlives its scheduled duration
+            for until, pages in self._squeezed:
+                if until <= now:
+                    self.kv.release_pages(pages)
+                else:
+                    keep.append((until, pages))
+            self._squeezed = keep
+        if self._faults is None:
+            return
+        for ev in self._faults.events_at(now):
+            self.fault_counts[ev.kind] = self.fault_counts.get(ev.kind, 0) + 1
+            if ev.kind == "squeeze":      # pool pressure: free list shrinks
+                pages = self.kv.seize_pages(ev.pages)
+                if pages:
+                    self._squeezed.append((now + max(1, ev.duration), pages))
+            elif ev.kind == "evict":      # forced eviction -> requeue
+                i = ev.slot
+                if not (0 <= i < len(self.slots) and self.slots[i].active):
+                    i = next((j for j, s in enumerate(self.slots)
+                              if s.active), -1)
+                if i >= 0:
+                    self._preempt(i)
+            elif ev.kind == "drop":       # this tick's grant vanishes
+                self._drop_slots.update(
+                    range(len(self.slots)) if ev.slot < 0 else (ev.slot,))
+            elif ev.kind == "poison":     # nonfinite logits: the sampled
+                self._poison_slots.update(  # token comes back out-of-vocab
+                    range(len(self.slots)) if ev.slot < 0 else (ev.slot,))
+
+    # -- preemption / expiry -----------------------------------------------------
+
+    def _release_slot(self, i: int) -> None:
+        """Return slot ``i`` to the pool: pages freed refcount-aware
+        (shared pages survive for their other referents), prefix index
+        dropped, feed reset."""
+        self.slots[i] = _Slot()
+        self._feed[i] = self.cfg.pad_id
+        self._pindex.drop(i)
+        self.kv.free_slot(i)
+
+    def _preempt(self, i: int, quarantine: bool = False) -> None:
+        """Evict slot ``i`` and requeue its request AT THE FRONT with all
+        output emitted so far: on re-admission the emitted tokens replay as
+        forced prompt through the ragged prefill lane (recompute), so the
+        resumed request finishes token-identical to an uninterrupted run
+        (greedy decode is deterministic and the lane is pinned
+        bit-identical to stepwise decode)."""
+        slot = self.slots[i]
+        req = self._reqs[slot.rid]
+        req.emitted.extend(slot.out)
+        req.preempts += 1
+        self.status[req.rid] = RequestStatus.QUEUED
+        self.queue.insert(0, req)
+        self._release_slot(i)
+        if quarantine:
+            self._quarantined[i] = self.ticks \
+                + max(1, self.cfg.quarantine_ticks)
+            self.quarantines += 1
+        else:
+            self.preemptions += 1
+
+    def _preempt_for_capacity(self) -> bool:
+        """Victim selection when no slot can get step capacity.  Requires
+        >= 2 active slots: preempting the survivors' blocker strictly
+        advances total generated tokens, so the overload loop terminates; a
+        LONE stuck slot is only possible under fault-injected pool pressure
+        (its pages release on schedule — wait, don't thrash it)."""
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if len(active) < 2:
+            return False
+        gen = {i: len(self._reqs[self.slots[i].rid].emitted)
+               + len(self.slots[i].out) for i in active}
+        victim = self.scheduler.pick_victim(self.slots, self.kv,
+                                            generated=gen)
+        if victim < 0:
+            return False
+        self._preempt(victim)
+        return True
+
+    def _expire_deadlines(self) -> None:
+        """Requests past their tick budget terminate as DEADLINE_EXCEEDED
+        with whatever output they produced — queued and running alike (a
+        preempted request's deadline keeps ticking while it waits)."""
+        now = self.ticks
+        for req in [r for r in self.queue if 0 <= r.deadline_tick < now]:
+            self.queue.remove(req)
+            self.results[req.rid] = list(req.emitted)
+            self.status[req.rid] = RequestStatus.DEADLINE_EXCEEDED
+            self.deadline_exceeded += 1
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            req = self._reqs[slot.rid]
+            if 0 <= req.deadline_tick < now:
+                req.emitted.extend(slot.out)
+                self.results[req.rid] = list(req.emitted)
+                self.status[req.rid] = RequestStatus.DEADLINE_EXCEEDED
+                self.deadline_exceeded += 1
+                self._release_slot(i)
 
     def _find_donor(self, prompt: List[int]):
         """Longest-common-prefix match of ``prompt`` against the live
@@ -570,7 +810,13 @@ class PagedEngine(_SlotQueueBase):
         for i, slot in enumerate(self.slots):
             if slot.active or not self.queue:
                 continue
-            prompt = [int(t) for t in self.queue[0].prompt]
+            if self._quarantined.get(i, 0) > self.ticks:
+                continue                   # poisoned slot sits out
+            head = self.queue[0]
+            # a resumed request replays its emitted output as forced
+            # prompt: recompute rides the ragged prefill lane, and greedy
+            # decode continues token-identically from where it left off
+            prompt = [int(t) for t in head.prompt] + list(head.emitted)
             donor, n_shared = (-1, 0)
             if self.cfg.prefix_sharing:
                 donor, n_shared = self._find_donor(prompt)
@@ -587,21 +833,27 @@ class PagedEngine(_SlotQueueBase):
             self.kv.ensure(i, n_shared + 1)
             self.slots[i] = _Slot(rid=req.rid, forced=prompt[n_shared + 1:],
                                   out=[], history=prompt[:n_shared],
-                                  budget=req.max_new_tokens,
+                                  budget=req.max_new_tokens
+                                  - len(req.emitted),
                                   prompt_left=len(prompt) - n_shared,
                                   active=True)
             if self.cfg.prefix_sharing:
                 self._pindex.add(i, prompt[:n_shared])
             self._feed[i] = prompt[n_shared]
+            self.status[req.rid] = RequestStatus.RUNNING
+            if req.preempts:
+                # re-appended work (prefix-shared tokens cost nothing) —
+                # the bench's recompute-overhead fraction reads this
+                self.recompute_tokens += len(prompt) - n_shared
             self.joins += 1
 
     def _finish(self, i: int) -> None:
         slot = self.slots[i]
-        self.results[slot.rid] = slot.out
-        self.slots[i] = _Slot()
-        self._feed[i] = self.cfg.pad_id
-        self._pindex.drop(i)
-        self.kv.free_slot(i)              # drop the slot's page references
+        req = self._reqs[slot.rid]
+        self.results[slot.rid] = req.emitted + slot.out
+        self.status[slot.rid] = (RequestStatus.PREEMPTED_RESUMED
+                                 if req.preempts else RequestStatus.FINISHED)
+        self._release_slot(i)             # drop the slot's page references
 
     # -- stepping ---------------------------------------------------------------
 
@@ -631,18 +883,60 @@ class PagedEngine(_SlotQueueBase):
         chunk = max(1, cfg.prefill_chunk)
         T = self._chunk_tokens
         t0 = time.perf_counter()
+        self.ticks += 1
+        self._apply_faults()
+        self._expire_deadlines()
         self._admit()
         cow_disp0 = self.kv.cow_dispatches
         plan = self.scheduler.plan(self.slots, self.kv, chunk,
                                    prefill_tokens=T)
         self.stalls += plan.stalled
+        # PREEMPT-AND-RECOMPUTE: when no slot can get step capacity, evict
+        # victims (fewest tokens generated, then most pages held) until the
+        # survivors can advance — the victims requeue with their emitted
+        # output as forced prompt and finish token-identical later.  Each
+        # iteration drops one active slot, so the loop is bounded by B.
+        while not plan.any_work and cfg.preempt \
+                and self._preempt_for_capacity():
+            plan = self.scheduler.plan(self.slots, self.kv, chunk,
+                                       prefill_tokens=T)
+            self.stalls += plan.stalled
+        # dropped-grant fault: the victims' granted work vanishes AFTER
+        # planning (a dropped grant must look like lost work, not trigger
+        # preemption) — the scheduler simply re-grants next tick
+        if self._drop_slots:
+            for i in self._drop_slots:
+                if 0 <= i < len(self.slots):
+                    d = int(plan.steps[i]) + int(plan.prefill[i])
+                    if d:
+                        self.dropped_grants += d
+                        plan.steps[i] = 0
+                        plan.prefill[i] = 0
+            self._drop_slots.clear()
         if not plan.any_work:
+            self._poison_slots.clear()
             if self.busy:
-                raise RuntimeError(
-                    f"page pool exhausted: {len(self.kv.free)} free pages "
-                    f"cannot give any slot step capacity (num_pages="
-                    f"{self.kv.num_pages}, page={self.kv.page})")
+                if not cfg.preempt:
+                    raise RuntimeError(
+                        f"page pool exhausted: {len(self.kv.free)} free "
+                        f"pages cannot give any slot step capacity "
+                        f"(num_pages={self.kv.num_pages}, "
+                        f"page={self.kv.page})")
+                # idle-but-busy ticks are BOUNDED: every queued request is
+                # admissible, lone-slot stalls only ride out fault squeezes
+                # (which release on schedule), so sustained idling means a
+                # bookkeeping bug — fail loudly instead of spinning
+                self._idle += 1
+                if self._idle > 10_000:
+                    raise RuntimeError(
+                        "engine wedged: 10000 consecutive idle ticks with "
+                        "work pending (queue="
+                        f"{len(self.queue)}, active="
+                        f"{sum(s.active for s in self.slots)}, free="
+                        f"{len(self.kv.free)}, seized="
+                        f"{len(self.kv.seized)})")
             return
+        self._idle = 0
         B = len(self.slots)
         steps = plan.steps
         pgr = plan.prefill
@@ -730,15 +1024,46 @@ class PagedEngine(_SlotQueueBase):
             self.occupancy_trace.append(self.kv.occupancy())
 
         t1 = time.perf_counter()
-        toks_np = np.asarray(toks) if toks is not None else None  # device wait
-        nxt_np = np.asarray(nxt) if nxt is not None else None
+        toks_np = np.array(toks) if toks is not None else None  # device wait
+        nxt_np = np.array(nxt) if nxt is not None else None
         t2 = time.perf_counter()
+        # poison fault: nonfinite logits make the sampler return garbage —
+        # modeled as an out-of-vocab sentinel overwriting the slot's
+        # sampled tokens for this tick
+        if self._poison_slots:
+            for i in self._poison_slots:
+                if 0 <= i < B:
+                    if toks_np is not None and steps[i]:
+                        toks_np[:, i] = -1
+                    if nxt_np is not None and pgr[i]:
+                        nxt_np[i] = -1
+            self._poison_slots.clear()
+        # ALWAYS-ON output guard (not fault-plan-gated): a sampled token
+        # outside the vocabulary means the slot's logits were garbage —
+        # quarantine the slot and requeue the request with its PRE-TICK
+        # output, skipping this tick's bookkeeping for it entirely
+        vocab = self.model.cfg.vocab_size
+        poisoned: Set[int] = set()
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            g, si = int(pgr[i]), int(steps[i])
+            if g and slot.prompt_left - g <= 0:   # sampled token is kept
+                t = int(nxt_np[i])
+                if t < 0 or t >= vocab:
+                    poisoned.add(i)
+            if si and i not in poisoned:
+                for s in range(si):
+                    t = int(toks_np[s, i])
+                    if t < 0 or t >= vocab:
+                        poisoned.add(i)
+                        break
         # prefill-lane bookkeeping: the chunk's appended tokens are known
         # on the host (feed + forced prefix) — only the ONE sampled token
         # per slot came back, and it matters only when the prompt drained
         for i, slot in enumerate(self.slots):
             g = int(pgr[i])
-            if not slot.active or g == 0:
+            if not slot.active or g == 0 or i in poisoned:
                 continue
             fed = [int(self._feed[i])] + [int(t) for t in slot.forced[:g - 1]]
             slot.history.extend(fed)
@@ -763,7 +1088,7 @@ class PagedEngine(_SlotQueueBase):
         # decode-lane bookkeeping (legacy forced-prefill rides here too)
         for i, slot in enumerate(self.slots):
             si = int(steps[i])
-            if not slot.active or si == 0:
+            if not slot.active or si == 0 or i in poisoned:
                 continue
             # tokens fed this tick = this tick's K/V rows (donor index)
             fed = [int(self._feed[i])] \
@@ -789,6 +1114,12 @@ class PagedEngine(_SlotQueueBase):
                 self._finish(i)
             else:
                 self._feed[i] = toks_np[si - 1, i]
+        # quarantine poisoned slots: pages freed, request requeued with its
+        # pre-tick output (the garbage tokens never reach results), the
+        # slot index sits out cfg.quarantine_ticks admissions
+        for i in sorted(poisoned):
+            if self.slots[i].active:
+                self._preempt(i, quarantine=True)
         t3 = time.perf_counter()
         if cfg.trace_ticks:
             # host cost of the tick = everything but the device wait

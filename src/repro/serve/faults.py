@@ -1,0 +1,121 @@
+"""Seeded fault injection for the paged serving engine.
+
+The paper's premise — when the platform cannot observe a behavior, build
+the measurement yourself — applies to failure behavior too: no amount of
+happy-path benchmarking shows what a serving tick does when the page pool
+is squeezed by a co-tenant, a slot's grant is lost, or a kernel returns
+garbage logits.  A ``FaultPlan`` is a DETERMINISTIC schedule of such
+events keyed on the engine's tick counter, so every injected overload
+schedule is replayable byte-for-byte: the property harness fuzzes random
+plans (``FaultPlan.random``) and asserts the engine's invariants — no
+deadlock, ``PagedKVCache.check()`` every tick, zero page leaks, and
+token-identical output for every preempted-then-resumed request — under
+each one.
+
+Event kinds (all handled in ``PagedEngine._apply_faults`` /
+``PagedEngine.step``):
+
+  * ``squeeze`` — pool pressure: ``pages`` pages leave the free list for
+    ``duration`` ticks (``PagedKVCache.seize_pages``), as if another
+    tenant allocated them; the scheduler sees a smaller pool and the
+    preemption path absorbs the shortfall;
+  * ``evict`` — forced eviction of ``slot`` (any active slot if the index
+    is inactive): the request requeues and recomputes, exactly the
+    preemption path but triggered externally;
+  * ``drop`` — the tick's granted work for ``slot`` (< 0: every slot) is
+    lost after planning: pages stay allocated, no tokens advance, the
+    scheduler re-grants next tick (a lost dispatch, not a crash);
+  * ``poison`` — the slot's sampled tokens come back out-of-vocab this
+    tick (nonfinite-logit stand-in: the engine only ever sees sampled
+    ints, so garbage logits manifest as garbage tokens); the engine's
+    always-on output guard quarantines the slot and requeues the request
+    with its pre-tick output.
+
+Plans are plain data — no engine imports — so tests can build them by
+hand or sample them from a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("squeeze", "evict", "drop", "poison")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault: fires when the engine's tick counter reaches
+    ``tick``.  ``slot`` targets a slot index where the kind needs one
+    (evict/drop/poison; -1 = engine picks / all slots), ``pages`` and
+    ``duration`` parameterize squeezes."""
+    tick: int
+    kind: str
+    slot: int = -1
+    pages: int = 0
+    duration: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind: {self.kind!r} "
+                             f"(choices: {FAULT_KINDS})")
+        if self.tick < 1:
+            raise ValueError("fault tick must be >= 1 (ticks are counted "
+                             "from the first step() call)")
+        if self.kind == "squeeze" and (self.pages < 1 or self.duration < 1):
+            raise ValueError("squeeze needs pages >= 1 and duration >= 1")
+
+
+class FaultPlan:
+    """An immutable, replayable schedule of ``FaultEvent``s.  Arm it with
+    ``PagedEngine.install_faults(plan)``; the engine pulls
+    ``events_at(tick)`` at the top of every tick."""
+
+    def __init__(self, events: List[FaultEvent] = ()):  # noqa: B006
+        self.events: Tuple[FaultEvent, ...] = tuple(
+            sorted(events, key=lambda e: (e.tick, e.kind, e.slot)))
+        self._by_tick: Dict[int, List[FaultEvent]] = {}
+        for ev in self.events:
+            self._by_tick.setdefault(ev.tick, []).append(ev)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __repr__(self) -> str:
+        kinds = {}
+        for ev in self.events:
+            kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
+        return f"FaultPlan({len(self.events)} events: {kinds})"
+
+    def events_at(self, tick: int) -> List[FaultEvent]:
+        return self._by_tick.get(tick, [])
+
+    @property
+    def last_tick(self) -> int:
+        return self.events[-1].tick if self.events else 0
+
+    @classmethod
+    def random(cls, seed: int, *, n_events: int = 6, max_tick: int = 40,
+               max_batch: int = 4, max_pages: int = 4,
+               max_duration: int = 6,
+               kinds: Tuple[str, ...] = FAULT_KINDS) -> "FaultPlan":
+        """Sample a deterministic plan: ``n_events`` events uniformly over
+        ticks [1, max_tick], kinds from ``kinds``, slots from
+        [-1, max_batch) (-1 = engine picks / all), squeeze sizes up to
+        ``max_pages`` pages for up to ``max_duration`` ticks.  Same seed,
+        same plan — the fuzz harness logs the seed, so every failure
+        replays."""
+        rng = np.random.RandomState(seed)
+        events = []
+        for _ in range(n_events):
+            kind = kinds[rng.randint(len(kinds))]
+            tick = int(rng.randint(1, max_tick + 1))
+            slot = int(rng.randint(-1, max_batch))
+            if kind == "squeeze":
+                events.append(FaultEvent(
+                    tick, kind, pages=int(rng.randint(1, max_pages + 1)),
+                    duration=int(rng.randint(1, max_duration + 1))))
+            else:
+                events.append(FaultEvent(tick, kind, slot=slot))
+        return cls(events)

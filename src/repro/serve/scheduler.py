@@ -87,20 +87,58 @@ class TickPlan:
         return bool(self.steps.any()) or bool(self.prefill.any())
 
 
-class TickScheduler:
-    """Allocates each tick's per-slot grants (see module docstring)."""
+PREEMPT_POLICIES = ("fewest-tokens", "most-pages")
 
-    def __init__(self, fairness: str = "least-served", tick_budget: int = 0):
+
+class TickScheduler:
+    """Allocates each tick's per-slot grants (see module docstring) and
+    picks preemption victims when the engine must reclaim capacity."""
+
+    def __init__(self, fairness: str = "least-served", tick_budget: int = 0,
+                 preempt_policy: str = "fewest-tokens"):
         if fairness not in ("least-served", "slot-order"):
             raise ValueError(f"unknown fairness policy: {fairness!r}")
+        if preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"unknown preempt policy: {preempt_policy!r} "
+                             f"(choices: {PREEMPT_POLICIES})")
         self.fairness = fairness
         self.tick_budget = tick_budget
+        self.preempt_policy = preempt_policy
 
     def _order(self, slots) -> List[int]:
         idx = range(len(slots))
         if self.fairness == "least-served":
             return sorted(idx, key=lambda i: (slots[i].served, i))
         return list(idx)
+
+    def pick_victim(self, slots, kv: PagedKVCache,
+                    generated=None, exclude=()) -> int:
+        """Choose the slot to PREEMPT when no slot can be granted work.
+
+        ``"fewest-tokens"`` (default): the slot with the fewest tokens
+        generated so far — it has the least recompute to redo — breaking
+        ties toward the MOST pages held (preempting it frees the most
+        capacity), then lowest slot index.  ``"most-pages"`` inverts the
+        priority: free the most pages first, fewest tokens as the tie
+        break.  ``generated`` maps slot index -> total tokens generated
+        across preemptions (the engine passes emitted + current out; falls
+        back to the slot's current out).  Returns -1 if no active slot is
+        eligible."""
+        cand = [i for i, s in enumerate(slots)
+                if s.active and i not in exclude]
+        if not cand:
+            return -1
+
+        def gen(i):
+            if generated is not None and i in generated:
+                return generated[i]
+            return len(slots[i].out)
+
+        if self.preempt_policy == "most-pages":
+            key = lambda i: (-len(kv.owned[i]), gen(i), i)  # noqa: E731
+        else:
+            key = lambda i: (gen(i), -len(kv.owned[i]), i)  # noqa: E731
+        return min(cand, key=key)
 
     def _grant(self, kv: PagedKVCache, i: int, length: int, want: int):
         """Privatize shared blocks the appends would touch, then reserve
@@ -111,7 +149,11 @@ class TickScheduler:
         instead of hoarding a fresh page it cannot write past
         (regression-tested).  Only RESERVED here (host bookkeeping); the
         one batched device copy for every page the tick privatizes is
-        flushed at the end of the plan.  Returns (granted, cows)."""
+        flushed at the end of the plan.  A reservation the granted range
+        no longer reaches is ROLLED BACK (``cow_rollback``): under pool
+        pressure a page privatized ahead of an append that will never
+        come is a page stolen from whoever could actually advance.
+        Returns (granted, cows)."""
         cows = 0
         for b in kv.shared_blocks(i, length, length + want):
             if kv.cow_reserve(i, b):
@@ -121,10 +163,16 @@ class TickScheduler:
                 # block — a shared page is never appended to
                 want = max(0, b * kv.page - length)
                 break
+        granted = 0
         for s in range(want, 0, -1):
             if kv.ensure(i, length + s):
-                return s, cows
-        return 0, cows
+                granted = s
+                break
+        if cows:
+            # blocks past the last one the granted appends touch: undo
+            last_blk = (length + granted - 1) // kv.page if granted else -1
+            cows -= kv.cow_rollback(i, last_blk + 1)
+        return granted, cows
 
     def plan(self, slots, kv: PagedKVCache, chunk: int,
              prefill_tokens: int = 0) -> TickPlan:

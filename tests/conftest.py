@@ -1,6 +1,6 @@
 """Shared test config.
 
-Two pieces:
+Three pieces:
 
   * a ``slow`` marker (+ ``--runslow`` flag): the paged-cache property
     harness runs a short fuzz profile under tier-1 and a long profile
@@ -10,7 +10,15 @@ Two pieces:
     every test in the property-test modules at collection time, install a
     minimal shim that SKIPS @given tests and leaves the plain parametrized
     tests running.  When hypothesis is available the shim is inert.
+  * a per-test WATCHDOG: ``pytest-timeout`` is not installed either, so an
+    autouse fixture arms ``faulthandler.dump_traceback_later`` around every
+    test — a wedged serving engine (the exact failure mode the overload
+    harness exists to prevent) dumps every thread's stack and kills the
+    process instead of hanging tier-1 forever.  Budget via
+    ``REPRO_TEST_TIMEOUT`` seconds (0 disables; default 900).
 """
+import faulthandler
+import os
 import sys
 import types
 
@@ -20,6 +28,23 @@ import pytest
 def pytest_addoption(parser):
     parser.addoption("--runslow", action="store_true", default=False,
                      help="run tests marked slow (long fuzz profiles)")
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    """Per-test hang watchdog (stand-in for pytest-timeout, which the image
+    does not ship).  The timer RESETS each test, so the budget is per-test;
+    on expiry every thread's traceback is dumped and the process exits —
+    CI gets a stack instead of a silent hang."""
+    budget = float(os.environ.get("REPRO_TEST_TIMEOUT", "900"))
+    if budget <= 0:
+        yield
+        return
+    faulthandler.dump_traceback_later(budget, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()
 
 
 def pytest_configure(config):

@@ -1,0 +1,415 @@
+"""Overload & failure-semantics harness for the paged serving engine.
+
+The happy-path property harness (tests/test_paged_cache_props.py) fuzzes
+schedules the pool can absorb; THIS module drives the engine past its
+capacity on purpose and asserts the overload machinery keeps every
+guarantee:
+
+  * NO DEADLOCK, NO CRASH — oversubscribed schedules (requests >> pool,
+    bursty submits, injected faults) terminate in bounded ticks; the
+    legacy "page pool exhausted" RuntimeError is unreachable with
+    ``preempt=True`` (the default) for any admissible workload;
+  * TYPED TERMINALITY — every submitted rid ends in a terminal
+    ``RequestStatus`` (FINISHED | PREEMPTED_RESUMED | REJECTED |
+    CANCELLED | DEADLINE_EXCEEDED), never a hang;
+  * RECOMPUTE IDENTITY — a preempted-then-resumed request's output is
+    bit-identical (near-tie-aware, like the base harness) to the same
+    request run uninterrupted on the dense-cache oracle, including under
+    injected faults;
+  * POOL SAFETY — ``PagedKVCache.check()`` holds after every tick, and a
+    drained engine holds zero live pages, a full free list, and zero
+    refcounts, squeeze or no squeeze.
+
+Fault schedules come from ``serve/faults.py`` — deterministic, seeded,
+replayable (the seed is in every assertion message via the test id).
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get
+from repro.models import get_model
+from repro.serve.engine import (PagedEngine, RequestStatus, ServeConfig,
+                                ServingEngine, TERMINAL_STATUSES)
+from repro.serve.faults import FaultEvent, FaultPlan
+from repro.serve.scheduler import TickScheduler
+
+from test_paged_cache_props import _assert_match_or_near_tie, _check_tick
+
+BUDGETS = (3, 5)
+PROMPT_LENS = (3, 5, 8)
+
+
+@pytest.fixture(scope="module")
+def harness():
+    cfg = get("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    oracle = ServingEngine(model, params,
+                           ServeConfig(max_batch=1, max_seq=64,
+                                       max_new_tokens=max(BUDGETS)))
+    return model, params, oracle
+
+
+def _drain(pe, max_ticks=2000):
+    """Drain the engine with a hard tick bound (a wedge fails the test,
+    not the CI wall clock), then ride out any still-squeezed pages."""
+    t = 0
+    while pe.busy:
+        pe.step()
+        t += 1
+        assert t < max_ticks, "engine failed to terminate (wedged?)"
+    while pe._squeezed:
+        pe.step()
+        t += 1
+        assert t < max_ticks + 100
+    return t
+
+
+# ---------------------------------------------------------------------------
+# the formerly-crashing schedule (ISSUE regression)
+# ---------------------------------------------------------------------------
+
+def test_formerly_crashing_schedule_completes(harness):
+    """REGRESSION for the engine.py pool-exhausted crash: two requests
+    that each fit the pool alone but jointly wedge it used to raise
+    RuntimeError mid-run; with preempt-and-recompute (the default) the
+    same schedule completes, at least one request is PREEMPTED_RESUMED,
+    and BOTH outputs are token-identical to uninterrupted runs."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(0)
+    p1 = rng.randint(0, model.cfg.vocab_size, size=3).astype(np.int32)
+    p2 = rng.randint(0, model.cfg.vocab_size, size=3).astype(np.int32)
+    sc = ServeConfig(max_batch=2, max_seq=8, page_size=4, num_pages=3,
+                     prefill_chunk=2, max_new_tokens=4)
+    pe = PagedEngine(model, params, sc)
+    r1, r2 = pe.submit(p1, 4), pe.submit(p2, 4)
+    res = pe.run()                         # used to raise right here
+    assert pe.preemptions >= 1
+    assert pe.recompute_tokens > 0
+    statuses = {pe.status[r1], pe.status[r2]}
+    assert statuses <= TERMINAL_STATUSES
+    assert RequestStatus.PREEMPTED_RESUMED in statuses
+    for rid, p in ((r1, p1), (r2, p2)):
+        _assert_match_or_near_tie(
+            model, params, p, res[rid],
+            oracle.generate_batch([p], max_new_tokens=4)[0],
+            label=f"rid={rid} preempt-resume vs uninterrupted")
+    pe.kv.check()
+    assert pe.kv.live_pages == 0
+
+
+def test_forced_eviction_recompute_identical(harness):
+    """A fault-injected eviction mid-decode requeues the victim with its
+    emitted output; the resumed run must be bit-identical."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=5).astype(np.int32)
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=32, page_size=4, prefill_chunk=2,
+        max_new_tokens=5))
+    rid = pe.submit(prompt, 5)
+    pe.install_faults(FaultPlan([FaultEvent(3, "evict", slot=0),
+                                 FaultEvent(6, "evict", slot=0)]))
+    res = pe.run()
+    assert pe.status[rid] is RequestStatus.PREEMPTED_RESUMED
+    assert pe.preemptions >= 1
+    _assert_match_or_near_tie(
+        model, params, prompt, res[rid],
+        oracle.generate_batch([prompt], max_new_tokens=5)[0],
+        label="forced-eviction resume")
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: deadlines, cancels, queue bounds, policy validation
+# ---------------------------------------------------------------------------
+
+def test_deadline_exceeded_keeps_partial_output(harness):
+    model, params, oracle = harness
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=3).astype(np.int32)
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=1, max_seq=32, page_size=4, prefill_chunk=1,
+        prefill_lane=False, max_new_tokens=8))
+    rid = pe.submit(prompt, 8, deadline_ticks=5)
+    res = pe.run()
+    assert pe.status[rid] is RequestStatus.DEADLINE_EXCEEDED
+    assert pe.deadline_exceeded == 1
+    got = res[rid]
+    assert 0 < len(got) < 8                # partial, not empty, not full
+    want = oracle.generate_batch([prompt], max_new_tokens=8)[0]
+    _assert_match_or_near_tie(model, params, prompt, got, want[:len(got)],
+                              label="deadline partial prefix")
+
+
+def test_queued_deadline_expires_without_running(harness):
+    """A request whose deadline passes while it WAITS terminates with
+    empty output — the queue cannot hold a corpse forever."""
+    model, params, _ = harness
+    rng = np.random.RandomState(3)
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=1, max_seq=32, page_size=4, max_new_tokens=6))
+    long_p = rng.randint(0, model.cfg.vocab_size, size=8).astype(np.int32)
+    a = pe.submit(long_p, 6)               # hogs the only slot
+    b = pe.submit(long_p[:3], 6, deadline_ticks=1)
+    res = pe.run()
+    assert pe.status[a] is RequestStatus.FINISHED
+    assert pe.status[b] is RequestStatus.DEADLINE_EXCEEDED
+    assert res[b] == []
+
+
+def test_cancel_queued_and_running(harness):
+    model, params, _ = harness
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(0, model.cfg.vocab_size, size=5).astype(np.int32)
+               for _ in range(3)]
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=1, max_seq=32, page_size=4, prefill_chunk=1,
+        max_new_tokens=6))
+    a, b, c = (pe.submit(p, 6) for p in prompts)
+    for _ in range(3):
+        pe.step()                          # a is running, b/c queued
+    assert pe.status[a] is RequestStatus.RUNNING
+    assert pe.cancel(a)                    # cancel RUNNING: frees the slot
+    assert pe.cancel(b)                    # cancel QUEUED
+    assert not pe.cancel(b)                # already terminal: no-op
+    assert not pe.cancel(999)              # unknown rid
+    res = pe.run()
+    assert pe.status[a] is RequestStatus.CANCELLED
+    assert pe.status[b] is RequestStatus.CANCELLED
+    assert pe.status[c] is RequestStatus.FINISHED
+    assert pe.cancelled == 2
+    assert res[b] == []
+    pe.kv.check()
+    assert pe.kv.live_pages == 0
+
+
+def test_max_queue_bounds_admission(harness):
+    model, params, _ = harness
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=1, max_seq=32, page_size=4, max_new_tokens=4,
+        max_queue=2))
+    p = np.arange(1, 4, dtype=np.int32)
+    rids = [pe.submit(p, 4) for _ in range(4)]
+    assert pe.status[rids[0]] is RequestStatus.QUEUED
+    assert pe.status[rids[1]] is RequestStatus.QUEUED
+    for rid in rids[2:]:
+        assert pe.status[rid] is RequestStatus.REJECTED
+        assert "queue full" in pe.reject_reason[rid]
+    assert pe.rejected == 2
+    pe.run()                               # the two admitted ones drain
+    assert all(pe.status[r] in TERMINAL_STATUSES for r in rids)
+
+
+def test_preempt_policy_validation(harness):
+    model, params, _ = harness
+    with pytest.raises(ValueError, match="preempt policy"):
+        PagedEngine(model, params, ServeConfig(
+            max_batch=1, max_seq=16, preempt_policy="coin-flip"))
+
+
+def test_pick_victim_policies():
+    """Victim selection is pure bookkeeping — pin both policies on a
+    synthetic slot/pool state (no model needed)."""
+    class S:                               # minimal slot stand-in
+        def __init__(self, active, out):
+            self.active, self.out = active, out
+
+    class KV:
+        owned = [[1, 2, 3], [4], [5, 6], []]
+
+    slots = [S(True, [0, 0]), S(True, [0]), S(True, [0]), S(False, [])]
+    fewest = TickScheduler(preempt_policy="fewest-tokens")
+    # fewest tokens: slots 1 and 2 tie at 1 token; most pages breaks the
+    # tie toward slot 2 (2 pages vs 1)
+    assert fewest.pick_victim(slots, KV()) == 2
+    most = TickScheduler(preempt_policy="most-pages")
+    assert most.pick_victim(slots, KV()) == 0      # 3 pages held
+    assert fewest.pick_victim(slots, KV(), exclude=(1, 2)) == 0
+    assert fewest.pick_victim([S(False, [])], KV()) == -1
+
+
+# ---------------------------------------------------------------------------
+# targeted faults
+# ---------------------------------------------------------------------------
+
+def test_poison_quarantines_and_resumes(harness):
+    """A poisoned tick (out-of-vocab sampled tokens) must never leak into
+    results: the slot is quarantined, the request resumes elsewhere/later
+    and still finishes token-identical."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=3).astype(np.int32)
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=32, page_size=4, prefill_chunk=2,
+        max_new_tokens=5, quarantine_ticks=2))
+    rid = pe.submit(prompt, 5)
+    # tick 1 drains the 3-token prompt (lane) and samples output 1; poison
+    # tick 2, a pure-decode tick, so the garbage hits kept tokens
+    pe.install_faults(FaultPlan([FaultEvent(2, "poison", slot=0)]))
+    res = pe.run()
+    assert pe.quarantines == 1
+    assert pe.status[rid] is RequestStatus.PREEMPTED_RESUMED
+    vocab = model.cfg.vocab_size
+    assert all(0 <= t < vocab for t in res[rid])   # no garbage leaked
+    _assert_match_or_near_tie(
+        model, params, prompt, res[rid],
+        oracle.generate_batch([prompt], max_new_tokens=5)[0],
+        label="poison-quarantine resume")
+
+
+def test_squeeze_starves_then_recovers(harness):
+    """Pool pressure that seizes most of the free list forces idle ticks
+    or preemptions but never wedges: pages release on schedule, the
+    engine drains, and the pool partition (incl. the seized set) holds
+    every tick."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(0, model.cfg.vocab_size, size=5).astype(np.int32)
+               for _ in range(3)]
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=24, page_size=4, num_pages=7, prefill_chunk=2,
+        max_new_tokens=5))
+    rids = [pe.submit(p, 5) for p in prompts]
+    pe.install_faults(FaultPlan([
+        FaultEvent(2, "squeeze", pages=4, duration=5),
+        FaultEvent(4, "squeeze", pages=2, duration=3)]))
+    t = 0
+    while pe.busy:
+        pe.step()
+        _check_tick(pe)                    # partition holds under seizure
+        t += 1
+        assert t < 500
+    while pe._squeezed:
+        pe.step()
+    assert pe.fault_counts.get("squeeze") == 2
+    assert not pe.kv.seized
+    pe.kv.check()
+    assert pe.kv.live_pages == 0
+    assert len(pe.kv.free) == pe.kv.num_pages - 1
+    for rid, p in zip(rids, prompts):
+        assert pe.status[rid] in (RequestStatus.FINISHED,
+                                  RequestStatus.PREEMPTED_RESUMED)
+        _assert_match_or_near_tie(
+            model, params, p, pe.results[rid],
+            oracle.generate_batch([p], max_new_tokens=5)[0],
+            label=f"squeeze rid={rid}")
+
+
+def test_dropped_grant_is_retried(harness):
+    """A dropped grant loses a tick's work, not the request: the engine
+    re-grants next tick and the output is unchanged."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=5).astype(np.int32)
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=1, max_seq=32, page_size=4, prefill_chunk=2,
+        max_new_tokens=5))
+    rid = pe.submit(prompt, 5)
+    pe.install_faults(FaultPlan([FaultEvent(1, "drop", slot=-1),
+                                 FaultEvent(3, "drop", slot=0)]))
+    res = pe.run()
+    assert pe.dropped_grants > 0
+    assert pe.status[rid] is RequestStatus.FINISHED
+    _assert_match_or_near_tie(
+        model, params, prompt, res[rid],
+        oracle.generate_batch([prompt], max_new_tokens=5)[0],
+        label="dropped-grant retry")
+
+
+# ---------------------------------------------------------------------------
+# oversubscription fuzz: requests >> pool x deadlines x cancels x faults
+# ---------------------------------------------------------------------------
+
+def _overload_fuzz(model, params, oracle, seed, *, with_faults):
+    """One seeded oversubscribed schedule.  Pool: 7 allocatable pages
+    (28 tokens); load: 10 requests of up to 13 tokens each, submitted in
+    bursts, 30% carrying tight deadlines, ~15% cancelled mid-flight,
+    optionally under a random fault plan.  Asserts termination, per-tick
+    pool invariants, typed terminality for every rid, leak-freedom after
+    drain, and (near-tie-aware) output identity for every request that
+    ran to completion."""
+    rng = np.random.RandomState(seed)
+    cfg = model.cfg
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=3, max_seq=48, page_size=4, num_pages=8,
+        prefill_chunk=3, max_new_tokens=max(BUDGETS)))
+    if with_faults:
+        pe.install_faults(FaultPlan.random(seed, n_events=5, max_tick=25,
+                                           max_batch=3, max_pages=3,
+                                           max_duration=4))
+    submitted = {}
+    pending = [(rng.randint(0, cfg.vocab_size,
+                            size=rng.choice(PROMPT_LENS)).astype(np.int32),
+                int(rng.choice(BUDGETS)),
+                int(rng.randint(4, 25)) if rng.rand() < 0.3 else 0)
+               for _ in range(10)]
+    ticks = 0
+    while pending or pe.busy:
+        # bursty submit: dump a few requests at once, then starve
+        if pending and (ticks % 5 == 0 or not pe.busy):
+            for _ in range(min(len(pending), rng.randint(2, 5))):
+                p, b, dl = pending.pop()
+                submitted[pe.submit(p, b, deadline_ticks=dl)] = (p, b)
+        if rng.rand() < 0.15 and submitted:
+            victim = int(rng.choice(sorted(submitted)))
+            pe.cancel(victim)              # False on terminal rids: fine
+        if pe.busy:
+            pe.step()
+            _check_tick(pe)
+        ticks += 1
+        assert ticks < 1500, f"seed={seed}: schedule failed to terminate"
+    while pe._squeezed:
+        pe.step()
+        _check_tick(pe)
+    # leak-freedom after drain
+    pe.kv.check()
+    assert pe.kv.live_pages == 0, f"seed={seed}: pages leaked"
+    assert len(pe.kv.free) == pe.kv.num_pages - 1
+    assert (pe.kv.refcount[1:] == 0).all()
+    assert not pe.kv.seized
+    # typed terminality for EVERY rid ever submitted
+    for rid in submitted:
+        assert pe.status[rid] in TERMINAL_STATUSES, \
+            f"seed={seed} rid={rid}: non-terminal {pe.status[rid]}"
+        assert rid in pe.results
+    # output identity for completed requests (incl. preempted-resumed,
+    # incl. under faults); partial outputs must be an oracle PREFIX
+    for rid, (p, b) in submitted.items():
+        got = pe.results[rid]
+        st = pe.status[rid]
+        if st is RequestStatus.REJECTED:
+            assert got == []
+            continue
+        want = oracle.generate_batch([p], max_new_tokens=b)[0]
+        if st in (RequestStatus.FINISHED, RequestStatus.PREEMPTED_RESUMED):
+            _assert_match_or_near_tie(model, params, p, got, want,
+                                      label=f"seed={seed} rid={rid} ({st})")
+        else:                              # cancelled / deadline: prefix
+            assert len(got) <= len(want)
+            _assert_match_or_near_tie(model, params, p, got,
+                                      want[:len(got)],
+                                      label=f"seed={seed} rid={rid} ({st})")
+    return pe
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_oversubscription_fuzz(harness, seed):
+    model, params, oracle = harness
+    pe = _overload_fuzz(model, params, oracle, seed, with_faults=False)
+    assert pe.preemptions + pe.deadline_exceeded + pe.cancelled > 0, \
+        "schedule never stressed the overload machinery"
+
+
+@pytest.mark.parametrize("seed", [2, 3])
+def test_oversubscription_fuzz_with_faults(harness, seed):
+    model, params, oracle = harness
+    _overload_fuzz(model, params, oracle, seed, with_faults=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(4, 16)))
+def test_oversubscription_fuzz_long(harness, seed):
+    model, params, oracle = harness
+    _overload_fuzz(model, params, oracle, seed,
+                   with_faults=bool(seed % 2))

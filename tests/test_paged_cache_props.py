@@ -37,7 +37,9 @@ import pytest
 
 from repro.configs import get
 from repro.models import get_model
-from repro.serve.engine import PagedEngine, ServeConfig, ServingEngine
+from repro.serve.cache import PagedKVCache
+from repro.serve.engine import (PagedEngine, RequestStatus, ServeConfig,
+                                ServingEngine)
 
 PROMPT_LENS = (3, 5, 8)
 BUDGETS = (3, 5)
@@ -636,23 +638,48 @@ def test_chunk_reservation_capped_at_remaining_work(harness):
                                              max_new_tokens=1)[0]
 
 
-def test_pool_exhaustion_raises(harness):
-    """A workload no eviction can ever unblock raises instead of spinning."""
+def test_inadmissible_request_rejected_at_submit(harness):
+    """REGRESSION: a request no eviction can ever serve (prompt + budget
+    exceed the whole pool) used to spin until the deep-tick pool-exhausted
+    raise; now it is typed-REJECTED at submit() and the engine stays
+    usable."""
     model, params, _ = harness
     sc = ServeConfig(max_batch=1, max_seq=8, max_new_tokens=5, page_size=4,
                      num_pages=2, prefill_chunk=4)   # 1 allocatable page
     pe = PagedEngine(model, params, sc)
-    pe.submit(np.arange(3, dtype=np.int32))
-    with pytest.raises(RuntimeError, match="page pool exhausted"):
-        pe.run()
+    rid = pe.submit(np.arange(3, dtype=np.int32))    # 3 + 5 > 4 tokens
+    assert pe.status[rid] is RequestStatus.REJECTED
+    assert "pool" in pe.reject_reason[rid]
+    assert pe.results[rid] == []
+    assert not pe.busy                               # nothing queued/stalled
+    pe.run()                                         # no-op, no raise
 
 
-def test_oversize_request_raises(harness):
+def test_oversize_request_rejected_at_submit(harness):
+    """A prompt+budget wider than the slot's block table used to raise
+    ``max_blocks`` from deep inside a tick; now submit() rejects it."""
     model, params, _ = harness
     sc = ServeConfig(max_batch=1, max_seq=8, max_new_tokens=12, page_size=4)
     pe = PagedEngine(model, params, sc)          # max_blocks = 2 (8 tokens)
-    pe.submit(np.arange(5, dtype=np.int32))      # 5 + 12 > 8
-    with pytest.raises(RuntimeError, match="max_blocks"):
+    rid = pe.submit(np.arange(5, dtype=np.int32))    # 5 + 12 > 8
+    assert pe.status[rid] is RequestStatus.REJECTED
+    assert "max_blocks" in pe.reject_reason[rid]
+    assert not pe.busy
+
+
+def test_pool_exhaustion_raises_only_without_preemption(harness):
+    """The legacy pool-exhausted RuntimeError survives ONLY behind
+    ``preempt=False``: two individually-admissible requests that jointly
+    wedge a 2-page pool raise on the baseline config and complete via
+    preempt-and-recompute on the default config (that regression lives in
+    tests/test_overload_props.py)."""
+    model, params, _ = harness
+    sc = ServeConfig(max_batch=2, max_seq=8, max_new_tokens=5, page_size=4,
+                     num_pages=3, prefill_chunk=2, preempt=False)
+    pe = PagedEngine(model, params, sc)
+    pe.submit(np.arange(3, dtype=np.int32), 5)    # 8 tokens = 2 blocks each:
+    pe.submit(np.arange(3, 6, dtype=np.int32), 5)  # admissible alone, wedged
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
         pe.run()
 
 
@@ -699,3 +726,122 @@ def test_defrag_compacts_to_prefix(harness):
     assert sorted(pe.kv.free) == list(range(live + 1, pe.kv.num_pages))
     res = pe.run()                               # still drains correctly
     assert len(res) == 5
+
+
+# ---------------------------------------------------------------------------
+# pending-COW rollback / cancellation (the mid-plan dry-pool path)
+# ---------------------------------------------------------------------------
+
+def test_cow_rollback_restores_sharing(harness):
+    """REGRESSION (mid-plan dry pool): a COW reservation undone by
+    ``cow_rollback`` must restore the shared mapping exactly — source
+    refcount bumped back, table/owned rewired, the reserved destination
+    page returned to the free list — leaving no trace in the partition
+    invariant."""
+    model, _, _ = harness
+    kv = PagedKVCache(model, 2, 32, page_size=4, num_pages=6)
+    kv.ensure(0, 8)                       # donor: 2 pages
+    kv.length[0] = 8
+    kv.share(1, 0, 8)                     # both pages shared
+    free0 = sorted(kv.free)
+    assert kv.cow_reserve(1, 0) and kv.cow_reserve(1, 1)
+    assert len(kv._pending_cow) == 2
+    kv.check(allow_pending=True)          # mid-plan state is legal
+    cow0 = kv.cow_copies
+    # roll back only the SECOND reservation (a shrunken grant)
+    assert kv.cow_rollback(1, from_blk=1) == 1
+    assert len(kv._pending_cow) == 1
+    assert kv.owned[1][1] == kv.owned[0][1]      # sharing restored
+    assert kv.refcount[kv.owned[0][1]] == 2
+    kv.check(allow_pending=True)
+    # roll back the rest: the pool is exactly as before the reservations
+    assert kv.cow_rollback(1) == 1
+    assert not kv._pending_cow
+    assert kv.owned[1] == kv.owned[0]
+    assert sorted(kv.free) == free0
+    assert kv.cow_copies == cow0 - 2      # counters unwound too
+    kv.check()
+
+
+def test_free_slot_cancels_pending_cow(harness):
+    """REGRESSION: freeing a slot with a PENDING COW reservation must
+    cancel the reservation, not leave a queued device copy into a page
+    that just returned to the free list (whoever allocates it next would
+    be silently corrupted by the late flush)."""
+    model, _, _ = harness
+    kv = PagedKVCache(model, 2, 32, page_size=4, num_pages=6)
+    kv.ensure(0, 4)
+    kv.length[0] = 4
+    kv.share(1, 0, 4)
+    assert kv.cow_reserve(1, 0)           # pending copy into a fresh page
+    dst = kv.owned[1][0]
+    kv.free_slot(1)                       # evict the sharer mid-plan
+    assert not kv._pending_cow            # the copy was cancelled...
+    assert dst in kv.free                 # ...and its page is free again
+    kv.check()
+    assert kv.cow_flush() == 0            # nothing queued for the device
+
+
+def test_grant_dry_pool_leaves_no_stray_reservation(harness):
+    """Scheduler-level pin for the mid-plan dry-pool path: a grant clipped
+    (or refused) by pool pressure must leave the pending-COW queue holding
+    ONLY reservations the granted appends actually reach — a zero grant
+    holds zero pages hostage, and a clipped multi-block grant keeps
+    exactly the reservations below the clip."""
+    from repro.serve.scheduler import TickScheduler
+    model, _, _ = harness
+    sched = TickScheduler()
+    # appends into the shared trailing block with ONE free page: the COW
+    # takes the spare, the grant lands inside the privatized page
+    kv = PagedKVCache(model, 2, 32, page_size=4, num_pages=4)
+    kv.ensure(0, 8)
+    kv.length[0] = 8
+    kv.share(1, 0, 8)
+    kv.length[1] = 6
+    granted, cows = sched._grant(kv, 1, 6, 2)
+    assert granted == 2 and cows == 1
+    assert len(kv._pending_cow) == 1      # exactly the reachable block
+    kv.check(allow_pending=True)
+    kv.cow_flush()
+    kv.check()
+    # a grant that CANNOT advance (block 2 needed, pool dry) must not
+    # leave any reservation behind
+    granted, cows = sched._grant(kv, 1, 8, 2)
+    assert granted == 0 and cows == 0
+    assert not kv._pending_cow
+    kv.check()
+
+
+def test_fuzz_pending_cow_never_targets_free_page(harness):
+    """Fuzz pin for the rollback/cancellation machinery: random share /
+    reserve / rollback / free-slot churn on a bare pool, asserting after
+    every operation that pending copies only ever reference live pages
+    (``check(allow_pending=True)``) and that a full rollback + free drains
+    the pool leak-free."""
+    model, _, _ = harness
+    rng = np.random.RandomState(11)
+    for trial in range(20):
+        kv = PagedKVCache(model, 3, 32, page_size=4, num_pages=8)
+        kv.ensure(0, rng.randint(1, 3) * 4)
+        kv.length[0] = 4 * len(kv.owned[0])
+        for _ in range(rng.randint(4, 12)):
+            op = rng.randint(4)
+            if op == 0 and not kv.owned[1]:
+                n = int(kv.length[0])
+                if n:
+                    kv.share(1, 0, rng.randint(1, n + 1))
+            elif op == 1 and kv.owned[1]:
+                blk = rng.randint(len(kv.owned[1]))
+                kv.cow_reserve(1, blk)
+            elif op == 2 and kv.owned[1]:
+                kv.cow_rollback(1, rng.randint(0, len(kv.owned[1]) + 1))
+            elif op == 3 and kv.owned[1]:
+                kv.free_slot(1)
+            kv.check(allow_pending=True)
+        kv.cow_flush()
+        for i in range(3):
+            if kv.owned[i]:
+                kv.free_slot(i)
+        kv.check()
+        assert kv.live_pages == 0, f"trial {trial} leaked"
+        assert len(kv.free) == kv.num_pages - 1
