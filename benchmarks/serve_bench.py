@@ -3,7 +3,8 @@ decode_32k cells' runnable counterpart).
 
 Scenarios
 (``--scenario
-smoke|ragged|shared-prefix|long-decode|long-prompt|overload|all``):
+smoke|ragged|shared-prefix|long-decode|long-prompt|overload|cold-prefix|
+all``):
 
   * smoke — the fused device-resident ``decode_many`` loop against the
     legacy per-token host loop (both with donated caches), plus the paged
@@ -50,6 +51,14 @@ smoke|ragged|shared-prefix|long-decode|long-prompt|overload|all``):
     preemption count, the recompute-token fraction, crashed ticks (gated
     to 0 — the pre-overload engine raised "page pool exhausted" here) and
     whether every request reached a typed terminal status.
+  * cold-prefix — cross-lifetime prefix retention: a donor with a
+    256-token system prompt drains COMPLETELY, then followers repeating
+    the same prompt run one at a time (a live donor never exists, so
+    every prefix hit must come from the retained pool's digest-keyed
+    frozen pages) against the identical engine with retention off.
+    Records the retained hit rate (gated to 1.0), re-shared tokens, a
+    TTFT proxy (ticks per request) and the warm-vs-cold tokens/s speedup
+    (gated >= 1.5).
 
 ``--json`` writes BENCH_serve.json so the perf trajectory is tracked across
 PRs (scripts/verify.sh gates on it).
@@ -106,6 +115,17 @@ OVERLOAD = dict(arch="granite-8b", batch=4, max_seq=96, requests=16,
                 prompt_lo=8, prompt_hi=24, out_lo=8, out_hi=16,
                 page_size=8, num_pages=13, prefill_chunk=4,
                 bursts=4, burst_gap=6)
+# cold-prefix: cross-lifetime retention.  One donor carries a 256-token
+# (16 exact pages) system prompt and drains COMPLETELY; followers with the
+# same system prompt arrive strictly AFTER it finished — zero donors
+# mid-flight, so live-slot prefix sharing can never fire and every hit
+# must come from the RETAINED pool (digest-keyed frozen pages of the dead
+# donor).  Requests run one at a time for the same reason.  The baseline
+# is the identical engine with retention disabled: every follower pays the
+# full 256-token prefill cold.
+COLD_PREFIX = dict(arch="granite-8b", batch=2, max_seq=320, sys_prompt=256,
+                   tail_lo=4, tail_hi=8, out=8, requests=6,
+                   page_size=16, prefill_chunk=4, prefill_chunk_tokens=64)
 
 
 def _model(arch):
@@ -534,6 +554,74 @@ def run_overload() -> Dict[str, float]:
     }
 
 
+def run_cold_prefix() -> Dict[str, float]:
+    """Cross-lifetime prefix retention: followers repeating a dead donor's
+    256-token system prompt, submitted strictly AFTER the donor drained
+    and run one at a time (no live donor can ever exist), against the
+    identical engine with retention off.  Tracks the retained hit rate
+    (every follower must adopt), re-shared tokens, a TTFT proxy (engine
+    ticks per request — the prefill ticks retention skips), and the
+    warm-vs-cold tokens/s speedup."""
+    from repro.serve.engine import PagedEngine, ServeConfig
+    c = COLD_PREFIX
+    cfg, model, params = _model(c["arch"])
+    rng = np.random.RandomState(0)
+    sys_prompt = rng.randint(0, cfg.vocab_size,
+                             size=c["sys_prompt"]).astype(np.int32)
+    reqs = [np.concatenate(
+                [sys_prompt,
+                 rng.randint(0, cfg.vocab_size,
+                             size=rng.randint(c["tail_lo"], c["tail_hi"] + 1)
+                             ).astype(np.int32)])
+            for _ in range(1 + c["requests"])]       # [0] is the donor
+    warm_req = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+
+    stats = {}
+    for name, retain in (("warm", True), ("cold", False)):
+        pe = PagedEngine(
+            model, params,
+            ServeConfig(max_batch=c["batch"], max_seq=c["max_seq"],
+                        page_size=c["page_size"],
+                        prefill_chunk=c["prefill_chunk"],
+                        prefill_chunk_tokens=c["prefill_chunk_tokens"],
+                        retain_prefixes=retain, trace_pool=False))
+        _drive(pe, warm_req)                         # compile both cells
+        pe.submit(reqs[0], c["out"])
+        pe.run()                                     # donor drains; slot FREED
+        assert pe.kv.live_pages == 0
+
+        def followers():
+            hits, ticks0, tok0 = 0, pe.steps_run, pe.tokens_out
+            t0 = time.perf_counter()
+            for p in reqs[1:]:
+                h0 = pe.kv.retained_hits
+                pe.submit(p, c["out"])
+                pe.run()                             # one request at a time
+                hits += int(pe.kv.retained_hits > h0)
+            dt = time.perf_counter() - t0
+            n = len(reqs) - 1
+            return {"hit_rate": hits / n,
+                    "tokens_per_s": (pe.tokens_out - tok0) / max(dt, 1e-9),
+                    "ticks_per_req": (pe.steps_run - ticks0) / n}
+
+        stats[name] = max((followers() for _ in range(2)),
+                          key=lambda s: s["tokens_per_s"])
+        stats[name]["retained_hit_tokens"] = float(pe.kv.retained_hit_tokens)
+
+    w, cold = stats["warm"], stats["cold"]
+    return {
+        "cold_prefix_hit_rate": w["hit_rate"],
+        "cold_prefix_retained_tokens": w["retained_hit_tokens"],
+        "cold_prefix_tokens_per_s": w["tokens_per_s"],
+        "cold_prefix_tokens_per_s_cold": cold["tokens_per_s"],
+        "cold_prefix_speedup": w["tokens_per_s"] / max(cold["tokens_per_s"],
+                                                       1e-9),
+        "cold_prefix_ticks_per_req": w["ticks_per_req"],
+        "cold_prefix_ticks_per_req_cold": cold["ticks_per_req"],
+        "cold_prefix_cold_hit_rate": cold["hit_rate"],   # must stay 0
+    }
+
+
 def bench_lines_from(stats: Dict[str, float]) -> List[str]:
     name = f"serve/{SMOKE['arch']}-reduced-decode"
     lines = []
@@ -601,6 +689,21 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"crashed_ticks={stats['overload_crashed_ticks']:.0f}"
             f"/all_terminal={stats['overload_all_terminal']:.0f}",
         ]
+    if "cold_prefix_tokens_per_s" in stats:
+        lines += [
+            f"serve/cold-prefix,0,"
+            f"tokens_per_s={stats['cold_prefix_tokens_per_s']:.1f}",
+            f"serve/cold-prefix-cold,0,"
+            f"tokens_per_s={stats['cold_prefix_tokens_per_s_cold']:.1f}",
+            f"serve/cold-prefix-speedup,0,"
+            f"x{stats['cold_prefix_speedup']:.2f}",
+            f"serve/cold-prefix-hits,0,"
+            f"hit_rate={stats['cold_prefix_hit_rate']:.2f}"
+            f"/retained_tokens={stats['cold_prefix_retained_tokens']:.0f}",
+            f"serve/cold-prefix-ttft-proxy,0,"
+            f"ticks_per_req={stats['cold_prefix_ticks_per_req']:.1f}"
+            f"/cold={stats['cold_prefix_ticks_per_req_cold']:.1f}",
+        ]
     return lines
 
 
@@ -619,7 +722,8 @@ def main() -> int:
                     help="write BENCH_serve.json next to the repo root")
     ap.add_argument("--scenario",
                     choices=("smoke", "ragged", "shared-prefix",
-                             "long-decode", "long-prompt", "overload", "all"),
+                             "long-decode", "long-prompt", "overload",
+                             "cold-prefix", "all"),
                     default="all",
                     help="smoke: fused-vs-loop decode; ragged: paged vs "
                          "dense waves under mixed lengths; shared-prefix: "
@@ -629,7 +733,10 @@ def main() -> int:
                          "few slots x 256-token prompts — the ragged "
                          "prefill lane vs prefill-by-decode; overload: "
                          "bursty submits ~4x oversubscribing the pool — "
-                         "goodput under preempt-and-recompute")
+                         "goodput under preempt-and-recompute; cold-prefix: "
+                         "repeated system prompt whose donor fully drained "
+                         "before the followers arrive — cross-lifetime "
+                         "retained-page sharing vs a retention-off engine")
     args = ap.parse_args()
     stats: Dict[str, float] = {}
     if args.scenario in ("smoke", "all"):
@@ -644,6 +751,8 @@ def main() -> int:
         stats.update(run_long_prompt())
     if args.scenario in ("overload", "all"):
         stats.update(run_overload())
+    if args.scenario in ("cold-prefix", "all"):
+        stats.update(run_cold_prefix())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
@@ -694,6 +803,11 @@ def main() -> int:
                 config=OVERLOAD,
                 **{k: stats[k] for k in stats
                    if k.startswith("overload_")})
+        if args.scenario in ("cold-prefix", "all"):
+            record["cold_prefix"] = dict(
+                config=COLD_PREFIX,
+                **{k: stats[k] for k in stats
+                   if k.startswith("cold_prefix_")})
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

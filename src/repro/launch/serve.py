@@ -27,7 +27,24 @@ def main() -> int:
                     help="with --whole-batch: per-token host loop instead "
                          "of fused decode_many")
     ap.add_argument("--no-prefix-sharing", action="store_true",
-                    help="disable prompt-prefix page sharing on admission")
+                    help="disable prompt-prefix page sharing on admission "
+                         "(implies no cross-lifetime retention)")
+    ap.add_argument("--no-retain-prefixes", action="store_true",
+                    help="disable cross-lifetime prefix retention: a "
+                         "finished/evicted request's page-aligned prefix "
+                         "pages return to the free list immediately "
+                         "instead of staying adoptable by digest after "
+                         "the donor is gone")
+    ap.add_argument("--retain-policy", default="lru",
+                    choices=("lru", "popularity"),
+                    help="retained-pool reclamation order under pool "
+                         "pressure: least-recently-touched entries first "
+                         "(lru) or fewest-adoptions first (popularity — "
+                         "keeps hot system prompts alive longest)")
+    ap.add_argument("--retain-pool-pages", type=int, default=0,
+                    help="cap on retained-ONLY pages held idle (0 = "
+                         "pool-bounded: retention uses whatever the free "
+                         "list spares and pressure reclaims it lazily)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=4)
     ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
@@ -89,6 +106,12 @@ def main() -> int:
         ap.error("--max-queue must be >= 0 (0 = unbounded admission)")
     if args.deadline_ticks < 0:
         ap.error("--deadline-ticks must be >= 0 (0 = no deadline)")
+    if args.retain_pool_pages < 0:
+        ap.error("--retain-pool-pages must be >= 0 (0 = pool-bounded)")
+    if args.no_prefix_sharing and not args.no_retain_prefixes:
+        print("[launch.serve] NOTE: --no-prefix-sharing disables the "
+              "donor index, so cross-lifetime retention is off too "
+              "(retention is digest-keyed prefix sharing)")
     if args.deadline_ticks and args.deadline_ticks < args.new_tokens:
         print(f"[launch.serve] NOTE: --deadline-ticks "
               f"({args.deadline_ticks}) is below --new-tokens "
@@ -143,6 +166,9 @@ def main() -> int:
                        prefill_lane=not args.no_prefill_lane,
                        prefill_chunk_tokens=args.prefill_chunk_tokens,
                        prefix_sharing=not args.no_prefix_sharing,
+                       retain_prefixes=not args.no_retain_prefixes,
+                       retain_pool_pages=args.retain_pool_pages,
+                       retain_policy=args.retain_policy,
                        preempt=not args.no_preempt,
                        preempt_policy=args.preempt_policy,
                        max_queue=args.max_queue,
@@ -184,6 +210,10 @@ def main() -> int:
           f"{engine.kv.cow_copies} COW copies), page util "
           f"mean={np.mean(util) if util else 0:.2f} "
           f"max={np.max(util) if util else 0:.2f}")
+    print(f"[launch.serve] retention: {engine.kv.retained_hits} retained "
+          f"adoptions ({engine.kv.retained_hit_tokens} tokens re-shared "
+          f"from dead donors), {engine.kv.retained_pages} pages retained, "
+          f"{engine.kv.retained_reclaimed_pages} reclaimed under pressure")
     from repro.serve.engine import RequestStatus
     n_status = {s.value: sum(1 for r in rids if engine.status[r] == s)
                 for s in RequestStatus}

@@ -136,7 +136,9 @@ class Model:
         return ce + cfg.router_aux_weight * aux
 
     def prefill(self, params, batch: Dict[str, Any]):
-        """Returns (last-position logits (B, V), cache-parts)."""
+        """Returns (last-position logits (B, V), cache-parts).  The logits
+        are f32 (exact unembed): they exist to pick the first generated
+        token, and sampling at activation dtype flips argmax near-ties."""
         cfg = self.cfg
         if cfg.is_encoder_decoder:
             logits, _, cache = T.whisper_forward(

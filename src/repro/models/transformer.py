@@ -445,12 +445,30 @@ def _logits(params, cfg: ArchConfig, h):
     return constrain(logits, "batch", None, "model")
 
 
+def _logits_exact(params, cfg: ArchConfig, h):
+    """f32 unembed for positions whose logits DECIDE a token (decode steps
+    and the prefill last position).  The activation-dtype unembed rounds
+    logits to bf16 (~2^-8 relative), coarse enough to flip an argmax
+    near-tie between two numerically-equivalent lanes (batched prefill vs
+    prefill-by-decode picked different tokens on ragged workloads); at f32
+    the gap that could flip is ~1e-7 of the logit scale, below any real
+    cross-lane divergence the harness would want to catch.  Full-sequence
+    training logits stay in activation dtype — the loss path upcasts
+    inside the fused unembed+CE and never samples."""
+    h = apply_norm(h, params["ln_f"], cfg)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(h.astype(jnp.float32), table.astype(jnp.float32))
+    return constrain(logits, "batch", None, "model")
+
+
 def lm_forward(params, cfg: ArchConfig, inputs, positions,
                mode: str = "train"):
     """inputs: tokens (B, S) int32 or embeddings (B, S, d).
     positions: (B, S) or (3, B, S) for M-RoPE.
     mode: train | prefill | hidden (hidden returns the post-ln_f hidden
-    states instead of logits — the fused unembed+CE loss consumes that).
+    states instead of logits — the fused unembed+CE loss consumes that;
+    prefill returns only the LAST position's logits, (B, 1, V) at f32 via
+    _logits_exact, since their sole consumer samples the next token).
     Returns (logits_or_hidden, aux, cache_parts or None)."""
     assert mode in ("train", "prefill", "hidden")
     h = _embed_in(params, cfg, inputs)
@@ -465,6 +483,9 @@ def lm_forward(params, cfg: ArchConfig, inputs, positions,
                                params["blocks"])
         if mode == "hidden":
             return (apply_norm(h, params["ln_f"], cfg),
+                    jnp.zeros((), jnp.float32), None)
+        if mode == "prefill":
+            return (_logits_exact(params, cfg, h[:, -1:]),
                     jnp.zeros((), jnp.float32), None)
         return _logits(params, cfg, h), jnp.zeros((), jnp.float32), None
 
@@ -499,11 +520,13 @@ def lm_forward(params, cfg: ArchConfig, inputs, positions,
                                      params["blocks"])
     if mode == "hidden":
         return apply_norm(h, params["ln_f"], cfg), aux, None
-    logits = _logits(params, cfg, h)
-    cache = None
     if mode == "prefill":
-        cache = {"k": kvs[0], "v": kvs[1]}          # (L, B, S, KV, hd)
-    return logits, aux, cache
+        # prefill logits exist only to SAMPLE the next token after the
+        # prompt: unembed just the last position, at f32 (shape (B, 1, V)
+        # so callers' logits[:, -1] keeps working)
+        return (_logits_exact(params, cfg, h[:, -1:]), aux,
+                {"k": kvs[0], "v": kvs[1]})          # (L, B, S, KV, hd)
+    return _logits(params, cfg, h), aux, None
 
 
 def lm_decode(params, cfg: ArchConfig, tokens, cache):
@@ -540,7 +563,7 @@ def lm_decode(params, cfg: ArchConfig, tokens, cache):
             body, (h, cache["conv"], cache["ssm"], jnp.int32(0)),
             params["blocks"])
         new_cache = dict(cache, conv=conv, ssm=ssm_s, pos=pos + 1)
-        return _logits(params, cfg, h)[:, 0], new_cache
+        return _logits_exact(params, cfg, h)[:, 0], new_cache
 
     if cfg.family == "hybrid":
         return _hybrid_decode(params, cfg, h, rope, cache)
@@ -563,7 +586,7 @@ def lm_decode(params, cfg: ArchConfig, tokens, cache):
     (h, k, v, _), _ = jax.lax.scan(
         body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
     new_cache = dict(cache, k=k, v=v, pos=pos + 1)
-    return _logits(params, cfg, h)[:, 0], new_cache
+    return _logits_exact(params, cfg, h)[:, 0], new_cache
 
 
 def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
@@ -598,7 +621,7 @@ def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
         body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
     new_cache = dict(cache, k=k, v=v,
                      length=lengths + active.astype(jnp.int32))
-    return _logits(params, cfg, h)[:, 0], new_cache
+    return _logits_exact(params, cfg, h)[:, 0], new_cache
 
 
 def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
@@ -645,7 +668,7 @@ def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
     last = jnp.maximum(grants - 1, 0)[:, None, None]
     h_last = jnp.take_along_axis(h, last, axis=1)           # (B, 1, d)
     new_cache = dict(cache, k=k, v=v, length=new_len)
-    return _logits(params, cfg, h_last)[:, 0], new_cache
+    return _logits_exact(params, cfg, h_last)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -689,11 +712,11 @@ def _hybrid_forward(params, cfg: ArchConfig, h, rope, mode):
     if mode == "hidden":
         return (apply_norm(h, params["ln_f"], cfg),
                 jnp.zeros((), jnp.float32), None)
-    logits = _logits(params, cfg, h)
-    cache = None
     if mode == "prefill":
-        cache = {"attn_k": kvs[0], "attn_v": kvs[1]}   # (G, B, S, KV, hd)
-    return logits, jnp.zeros((), jnp.float32), cache
+        return (_logits_exact(params, cfg, h[:, -1:]),
+                jnp.zeros((), jnp.float32),
+                {"attn_k": kvs[0], "attn_v": kvs[1]})  # (G, B, S, KV, hd)
+    return _logits(params, cfg, h), jnp.zeros((), jnp.float32), None
 
 
 def _hybrid_decode(params, cfg: ArchConfig, h, rope, cache):
@@ -735,7 +758,7 @@ def _hybrid_decode(params, cfg: ArchConfig, h, rope, cache):
             mamba_step, (h, conv_all, ssm_all, li), tails)
     new_cache = dict(cache, conv=conv_all, ssm=ssm_all, attn_k=k_n,
                      attn_v=v_n, pos=pos + 1)
-    return _logits(params, cfg, h)[:, 0], new_cache
+    return _logits_exact(params, cfg, h)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -801,12 +824,12 @@ def whisper_forward(params, cfg: ArchConfig, frames, tokens,
     if mode == "hidden":
         return (apply_norm(h, params["ln_f"], cfg),
                 jnp.zeros((), jnp.float32), None)
-    logits = _logits(params, cfg, h)
-    cache = None
     if mode == "prefill":
         (k, v), (ck, cv) = ys
-        cache = {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
-    return logits, jnp.zeros((), jnp.float32), cache
+        return (_logits_exact(params, cfg, h[:, -1:]),
+                jnp.zeros((), jnp.float32),
+                {"k": k, "v": v, "cross_k": ck, "cross_v": cv})
+    return _logits(params, cfg, h), jnp.zeros((), jnp.float32), None
 
 
 def whisper_decode(params, cfg: ArchConfig, tokens, cache):
@@ -836,7 +859,7 @@ def whisper_decode(params, cfg: ArchConfig, tokens, cache):
         body, (h, cache["k"], cache["v"], jnp.int32(0)),
         (params["decoder"], cache["cross_k"], cache["cross_v"]))
     new_cache = dict(cache, k=k, v=v, pos=pos + 1)
-    return _logits(params, cfg, h)[:, 0], new_cache
+    return _logits_exact(params, cfg, h)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -66,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model, sample_token
-from repro.serve.cache import PagedKVCache
+from repro.serve.cache import PagedKVCache, digest_step
 from repro.serve.scheduler import TickScheduler
 
 
@@ -98,6 +98,14 @@ class ServeConfig:
     # --- prefix sharing / scheduling ---------------------------------------
     prefix_sharing: bool = True       # share resident prompt prefixes on admit
     share_min_tokens: int = 1         # smallest common prefix worth sharing
+    # --- cross-lifetime retention (needs prefix_sharing) ---------------------
+    retain_prefixes: bool = True      # keep finished/evicted slots' page-
+                                      # aligned prefix pages for digest-keyed
+                                      # re-sharing after the donor is gone
+    retain_pool_pages: int = 0        # max retained-ONLY pages held idle
+                                      # (0: pool-bounded — pressure reclaims)
+    retain_policy: str = "lru"        # reclamation order: "lru" |
+                                      # "popularity" (fewest adoptions first)
     fairness: str = "least-served"    # page-grant order ("slot-order": legacy)
     tick_budget: int = 0              # max fresh tokens per tick (0: uncapped)
     trace_pool: bool = True           # record per-tick util/occupancy traces
@@ -343,10 +351,6 @@ def _patch_rows(table, length, rows, t_rows, l_rows):
     return table.at[rows].set(t_rows), length.at[rows].set(l_rows)
 
 
-_HASH_MUL = 1_000_003
-_HASH_MOD = (1 << 61) - 1
-
-
 class _PrefixIndex:
     """Rolling-hash index over every live slot's token-history PREFIXES.
 
@@ -358,7 +362,11 @@ class _PrefixIndex:
     with no registered match — a prompt sharing nothing with any live slot
     costs one probe, independent of its length.  Digest collisions are
     survivable: the engine verifies the winning (slot, n) against the real
-    token history and falls back to the exact scan on a mismatch."""
+    token history and falls back to the exact scan on a mismatch.
+
+    The digest recurrence is shared with the RETAINED pool
+    (serve/cache.py ``digest_step``/``prefix_digests``): a prefix hashes
+    identically whether its donor is live or long dead."""
 
     def __init__(self):
         self._map: Dict[tuple, set] = {}      # (n, digest) -> slot ids
@@ -372,7 +380,7 @@ class _PrefixIndex:
         n = self._len.get(slot, 0)
         keys = self._keys.setdefault(slot, [])
         for t in tokens:
-            h = (h * _HASH_MUL + int(t) + 1) % _HASH_MOD
+            h = digest_step(h, t)
             n += 1
             key = (n, h)
             self._map.setdefault(key, set()).add(slot)
@@ -397,12 +405,44 @@ class _PrefixIndex:
         also matches n, so no longer match can exist past a miss)."""
         h, best, donor = 0, 0, -1
         for n in range(1, cap + 1):
-            h = (h * _HASH_MUL + int(prompt[n - 1]) + 1) % _HASH_MOD
+            h = digest_step(h, prompt[n - 1])
             owners = self._map.get((n, h))
             if not owners:
                 break
             best, donor = n, next(iter(owners))
         return donor, best
+
+    def check(self, slots) -> None:
+        """Index/engine consistency (fuzz-asserted every tick by the
+        property harness): every indexed slot is LIVE, its registered
+        length equals its real history, its digest chain recomputes from
+        that history, and every (n, digest) key's owner set round-trips —
+        the staleness a preempt->requeue->recompute cycle could introduce
+        if drop/add ever ran twice or not at all."""
+        for slot_id, n in self._len.items():
+            s = slots[slot_id]
+            assert s.active, \
+                f"prefix index holds entries for inactive slot {slot_id}"
+            assert n == len(s.history), \
+                f"slot {slot_id}: indexed length {n} != history " \
+                f"{len(s.history)}"
+            h = 0
+            keys = self._keys.get(slot_id, [])
+            assert len(keys) == n, \
+                f"slot {slot_id}: {len(keys)} keys for {n} indexed tokens"
+            for j, t in enumerate(s.history):
+                h = digest_step(h, t)
+                assert keys[j] == (j + 1, h), \
+                    f"slot {slot_id}: key {j} drifted from history"
+                assert slot_id in self._map.get((j + 1, h), ()), \
+                    f"slot {slot_id}: key {(j + 1, h)} unregistered"
+            assert self._digest.get(slot_id, 0) == h, \
+                f"slot {slot_id}: digest accumulator drifted"
+        for key, owners in self._map.items():
+            assert owners, f"empty owner set left behind for {key}"
+            for s_id in owners:
+                assert s_id in self._len and self._len[s_id] >= key[0], \
+                    f"key {key} names slot {s_id} beyond its indexed length"
 
 
 class PagedEngine:
@@ -505,10 +545,16 @@ class PagedEngine:
                                      donate_argnums=(2, 3))  # cache + key
         # dirty-row patcher for the device table/length mirrors
         self._patch = jax.jit(_patch_rows, donate_argnums=(0, 1))
+        # cross-lifetime retention rides the sharing machinery: without
+        # prefix_sharing nothing could ever adopt a retained page
+        self._retain = bool(cfg.prefix_sharing and cfg.retain_prefixes)
         self.kv = PagedKVCache(model, B, cfg.max_seq,
                                page_size=cfg.page_size,
                                max_blocks=cfg.max_blocks,
-                               num_pages=cfg.num_pages)
+                               num_pages=cfg.num_pages,
+                               retain=self._retain,
+                               retain_cap=cfg.retain_pool_pages,
+                               retain_policy=cfg.retain_policy)
         # DEVICE-RESIDENT tick state: the block table and lengths live on
         # device across ticks; the host patches only rows the cache marked
         # dirty (admission/COW/eviction/defrag) instead of re-uploading the
@@ -715,11 +761,15 @@ class PagedEngine:
     def _release_slot(self, i: int) -> None:
         """Return slot ``i`` to the pool: pages freed refcount-aware
         (shared pages survive for their other referents), prefix index
-        dropped, feed reset."""
+        dropped, feed reset.  With retention on, the slot's page-aligned
+        token-history prefix moves to the RETAINED pool instead of the
+        free list — finish and eviction alike (an evicted victim's resume
+        is the hottest possible re-share)."""
+        history = self.slots[i].history
         self.slots[i] = _Slot()
         self._feed[i] = self.cfg.pad_id
         self._pindex.drop(i)
-        self.kv.free_slot(i)
+        self.kv.free_slot(i, retain_tokens=history if self._retain else None)
 
     def _preempt(self, i: int, quarantine: bool = False) -> None:
         """Evict slot ``i`` and requeue its request AT THE FRONT with all
@@ -782,13 +832,16 @@ class PagedEngine:
                 self._release_slot(i)
 
     def _find_donor(self, prompt: List[int]):
-        """Longest-common-prefix match of ``prompt`` against the live
+        """Longest-common-prefix match of ``prompt`` against (a) the LIVE
         slots' resident token histories via the rolling-hash prefix index
-        (O(matched prefix), not O(slots x prompt)).  Returns (slot index,
-        shared token count) — (-1, 0) when nothing clears
-        ``share_min_tokens``.  The cap at ``len(prompt) - 1`` keeps the
-        last prompt token always fed (its logits seed the first sampled
-        output)."""
+        (O(matched prefix), not O(slots x prompt)) and (b) the RETAINED
+        pool of dead donors' page-aligned prefixes (same digests, via
+        ``kv.match_retained``).  Returns (kind, ref, n_shared) where kind
+        is "live" (ref = slot index), "retained" (ref = RetainedPrefix)
+        or None when nothing clears ``share_min_tokens``.  Live matches
+        win ties: they can extend past page boundaries and keep feeding
+        the index.  The cap at ``len(prompt) - 1`` keeps the last prompt
+        token always fed (its logits seed the first sampled output)."""
         cap = len(prompt) - 1
         donor, best = self._pindex.lookup(prompt, cap)
         if donor >= 0 and not (self.slots[donor].active
@@ -802,9 +855,15 @@ class PagedEngine:
                 n = min(_lcp(prompt, s.history), cap)
                 if n > best:
                     best, donor = n, j
-        if best < max(1, self.cfg.share_min_tokens):
-            return -1, 0
-        return donor, best
+        entry, n_ret = (None, 0)
+        if self._retain:
+            entry, n_ret = self.kv.match_retained(prompt, cap)
+        min_share = max(1, self.cfg.share_min_tokens)
+        if best >= n_ret and best >= min_share:
+            return "live", donor, best
+        if entry is not None and n_ret >= min_share:
+            return "retained", entry, n_ret
+        return None, None, 0
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -817,14 +876,18 @@ class PagedEngine:
             # prompt: recompute rides the ragged prefill lane, and greedy
             # decode continues token-identically from where it left off
             prompt = [int(t) for t in head.prompt] + list(head.emitted)
-            donor, n_shared = (-1, 0)
+            kind, ref, n_shared = (None, None, 0)
             if self.cfg.prefix_sharing:
-                donor, n_shared = self._find_donor(prompt)
-            if n_shared == 0 and not self.kv.free:
+                kind, ref, n_shared = self._find_donor(prompt)
+            if n_shared == 0 and self.kv.allocatable == 0:
                 break                      # pool dry: wait for eviction
             req = self.queue.pop(0)
-            if donor >= 0:
-                self.kv.share(i, donor, n_shared)
+            if kind == "live":
+                self.kv.share(i, ref, n_shared)
+                self.shared_tokens += n_shared
+            elif kind == "retained":
+                # cross-lifetime hit: the donor is gone, its pages are not
+                self.kv.adopt_retained(i, ref, n_shared)
                 self.shared_tokens += n_shared
             # no donor: the slot's length row is already 0 (free_slot
             # zeroed and dirty-marked it; a fresh engine starts at 0)

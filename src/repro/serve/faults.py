@@ -98,14 +98,18 @@ class FaultPlan:
     @classmethod
     def random(cls, seed: int, *, n_events: int = 6, max_tick: int = 40,
                max_batch: int = 4, max_pages: int = 4,
-               max_duration: int = 6,
+               max_duration: int = 6, deep_squeeze: float = 0.25,
                kinds: Tuple[str, ...] = FAULT_KINDS) -> "FaultPlan":
         """Sample a deterministic plan: ``n_events`` events uniformly over
         ticks [1, max_tick], kinds from ``kinds``, slots from
         [-1, max_batch) (-1 = engine picks / all), squeeze sizes up to
-        ``max_pages`` pages for up to ``max_duration`` ticks.  Same seed,
-        same plan — the fuzz harness logs the seed, so every failure
-        replays."""
+        ``max_pages`` pages for up to ``max_duration`` ticks.  With
+        probability ``deep_squeeze`` a squeeze asks for 4x ``max_pages`` —
+        deliberately more than the free list usually holds, so the seizure
+        must drain the cross-lifetime RETAINED pool (refcount-0 frozen
+        prefixes are reclaimable by definition; the fuzz profile covers
+        squeeze/evict against a warm retained pool).  Same seed, same plan
+        — the fuzz harness logs the seed, so every failure replays."""
         rng = np.random.RandomState(seed)
         events = []
         for _ in range(n_events):
@@ -113,8 +117,11 @@ class FaultPlan:
             tick = int(rng.randint(1, max_tick + 1))
             slot = int(rng.randint(-1, max_batch))
             if kind == "squeeze":
+                pages = int(rng.randint(1, max_pages + 1))
+                if rng.rand() < deep_squeeze:
+                    pages = 4 * max_pages
                 events.append(FaultEvent(
-                    tick, kind, pages=int(rng.randint(1, max_pages + 1)),
+                    tick, kind, pages=pages,
                     duration=int(rng.randint(1, max_duration + 1))))
             else:
                 events.append(FaultEvent(tick, kind, slot=slot))

@@ -49,6 +49,15 @@ for measured comparison.
 The scheduler owns allocation policy only: it mutates the ``PagedKVCache``
 through ``ensure()`` / ``cow_reserve()`` and returns a ``TickPlan``; the
 engine owns the device steps and the request lifecycle.
+
+RETAINED-POOL RECLAMATION rides the same reserve path: ``ensure()`` and
+``cow_reserve()`` allocate through the cache's ``_alloc_page`` choke
+point, which lazily reclaims cross-lifetime RETAINED pages (dead donors'
+frozen prefixes, serve/cache.py) when the free list runs dry.  A grant
+therefore drains the retained pool BEFORE it reports a stall and before
+the engine ever considers preempting a live slot — retained pages are a
+cache, never capacity pressure.  ``TickPlan.reclaimed`` reports how many
+retained pages this tick's grants consumed.
 """
 from __future__ import annotations
 
@@ -72,6 +81,7 @@ class TickPlan:
     prefill: np.ndarray = None  # (B,) int32 — prefill-lane tokens per slot
     stalled: int = 0           # active slots that wanted work but got none
     cow_copies: int = 0        # pages privatized for this tick's appends
+    reclaimed: int = 0         # retained pages reclaimed to serve grants
 
     def __post_init__(self):
         if self.prefill is None:
@@ -189,6 +199,7 @@ class TickScheduler:
             else (chunk + prefill_tokens) * B
         stalled = 0
         cows = 0
+        reclaimed0 = kv.retained_reclaimed_pages
         for i in self._order(slots):
             slot = slots[i]
             if not slot.active or budget <= 0:
@@ -221,4 +232,5 @@ class TickScheduler:
             budget -= granted
         kv.cow_flush()                  # ONE device copy for the whole tick
         return TickPlan(steps=steps, chunk=chunk, prefill=prefill,
-                        stalled=stalled, cow_copies=cows)
+                        stalled=stalled, cow_copies=cows,
+                        reclaimed=kv.retained_reclaimed_pages - reclaimed0)

@@ -57,44 +57,47 @@ def harness():
     return model, params, oracle
 
 
-def _assert_match_or_near_tie(model, params, prompt, got, want,
-                              tol=5e-3, label=""):
-    """Token comparison that is NEAR-TIE-AWARE instead of silently
-    accepting any divergence: identical outputs pass; on the first
-    differing token, the model's logits for that position are recomputed
-    (teacher-forced prefill of prompt + the oracle's tokens so far) and
-    BOTH candidate tokens must sit within ``tol`` of the max logit — the
-    genuine bf16 argmax near-tie the ragged workload is known to hit.  A
-    divergence with a real logit gap fails loudly.  Tokens after a
-    verified near-tie legitimately differ (the streams forked on a
-    coin-flip) and are not compared."""
+def _assert_tokens_identical(got, want, label=""):
+    """EXACT token identity between the paged engine and the oracle.
+
+    This used to be near-tie-aware (``_assert_match_or_near_tie``): the
+    unembed ran at activation dtype, and bf16 logit rounding (~2^-8
+    relative) could flip an argmax between two numerically-equivalent
+    lanes on the ragged workload.  Root-caused and fixed — every sampled
+    position (decode steps and the prefill last position) now unembeds at
+    f32 (``transformer._logits_exact``), so batched prefill and
+    prefill-by-decode pick the same token and any divergence is a REAL
+    bug, asserted loudly."""
     got, want = list(got), list(want)
-    if got == want:
-        return
-    n = min(len(got), len(want))
-    t = next((i for i in range(n) if got[i] != want[i]), n)
-    assert t < n, (f"{label}: outputs agree token-wise but differ in "
-                   f"length ({len(got)} vs {len(want)}): {got} vs {want}")
-    ctx = np.asarray(list(prompt) + want[:t], np.int32)[None]
-    logits, _ = model.prefill(params, {"tokens": jnp.asarray(ctx)})
-    row = np.asarray(logits[0], np.float32)
-    top = float(row.max())
-    gap_got = top - float(row[got[t]])
-    gap_want = top - float(row[want[t]])
-    assert max(gap_got, gap_want) < tol, (
-        f"{label}: divergence at step {t} ({got[t]} vs {want[t]}) is NOT "
-        f"a near-tie: logit gaps {gap_got:.4f}/{gap_want:.4f} >= {tol}")
+    assert got == want, f"{label}: outputs diverged: {got} vs {want}"
 
 
 def _check_tick(pe):
     """Per-tick invariants beyond ``kv.check()``: the engine's host token
     history mirrors the device lengths exactly (the prefix-sharing donor
-    index must never drift from the cache)."""
+    index must never drift from the cache), and the rolling-hash prefix
+    index holds entries ONLY for live slots, consistent with their real
+    histories (staleness across preempt->requeue->recompute cycles would
+    surface here)."""
     pe.kv.check()
     for i, slot in enumerate(pe.slots):
         if slot.active:
             assert len(slot.history) == int(pe.kv.length[i]), \
                 f"slot {i}: history/length drift"
+    pe._pindex.check(pe.slots)
+
+
+def _assert_drained_clean(pe):
+    """Post-drain pool accounting, retention-aware: no live references,
+    every non-retained page free — and after flushing the retained pool,
+    the free list is the ENTIRE pool (nothing leaked through retention)."""
+    assert pe.kv.live_pages == 0
+    assert (pe.kv.refcount[1:] == 0).all()
+    retained_only = pe.kv.retained_pages
+    assert len(pe.kv.free) == pe.kv.num_pages - 1 - retained_only
+    pe.kv.flush_retained()
+    pe.kv.check()
+    assert len(pe.kv.free) == pe.kv.num_pages - 1
 
 
 def _snapshot_shared(pe):
@@ -182,19 +185,16 @@ def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
     # eviction returns every page: nothing live, nothing leaked after drain
     # — and no page was ever freed while another slot still referenced it
     # (a premature free would surface as a refcount/partition violation in
-    # the per-tick check above)
-    assert pe.kv.live_pages == 0
-    assert len(pe.kv.free) == pe.kv.num_pages - 1
-    assert (pe.kv.refcount[1:] == 0).all()
+    # the per-tick check above).  Finished requests' prefixes legitimately
+    # outlive them in the RETAINED pool; flushing it must restore the full
+    # free list.
+    _assert_drained_clean(pe)
     assert set(res) == set(submitted)
     assert pe.joins == len(submitted)
     for rid, (p, b) in submitted.items():
         want = oracle.generate_batch([p], max_new_tokens=b)[0]
-        # near-tie-aware: an exact match passes; a divergence is accepted
-        # ONLY if the logit gap at the forking token is a genuine bf16
-        # argmax near-tie (silently differing streams fail loudly)
-        _assert_match_or_near_tie(
-            model, params, p, res[rid], want,
+        _assert_tokens_identical(
+            res[rid], want,
             label=f"seed={seed} rid={rid} (paged vs dense-cache oracle)")
     return {"ticks": pe.steps_run, "shared": pe.shared_tokens,
             "cow": pe.kv.cow_copies}
@@ -545,21 +545,20 @@ def test_tick_batches_cow_into_one_dispatch(harness):
         assert res[rid] == want
 
 
-def test_near_tie_helper_rejects_real_divergence(harness):
-    """The near-tie-aware comparison must NOT silently accept arbitrary
-    divergence: a token swap with a real logit gap fails, an exact match
-    passes."""
+def test_identity_helper_rejects_any_divergence(harness):
+    """The exact-identity comparison (which RETIRED the bf16 near-tie
+    workaround — sampled positions now unembed at f32) accepts only
+    token-for-token equality: any swap or length mismatch fails."""
     model, params, oracle = harness
     rng = np.random.RandomState(77)
     prompt = rng.randint(0, model.cfg.vocab_size, size=5).astype(np.int32)
     want = oracle.generate_batch([prompt], max_new_tokens=4)[0]
-    _assert_match_or_near_tie(model, params, prompt, want, want)  # passes
-    # greedy argmax vs the runner-up is a REAL gap on this seed: flipping
-    # the first token must be rejected (if it ever ties, tighten tol)
+    _assert_tokens_identical(want, want)                       # passes
     forged = [(want[0] + 1) % model.cfg.vocab_size] + want[1:]
-    with pytest.raises(AssertionError, match="NOT a near-tie"):
-        _assert_match_or_near_tie(model, params, prompt, forged, want,
-                                  tol=1e-6)
+    with pytest.raises(AssertionError, match="diverged"):
+        _assert_tokens_identical(forged, want)
+    with pytest.raises(AssertionError, match="diverged"):
+        _assert_tokens_identical(want[:-1], want)              # truncation
 
 
 def test_cow_preserves_shared_rows(harness):
@@ -705,8 +704,11 @@ def test_scheduler_rejects_unknown_fairness(harness):
 
 
 def test_defrag_compacts_to_prefix(harness):
-    """After defrag the live pages occupy the contiguous pool prefix and
-    the free list is exactly the tail (shared pages counted once)."""
+    """After defrag the kept pages occupy the contiguous pool prefix —
+    [null | live | retained-only] — and the free list is exactly the tail
+    (shared pages counted once).  Requests that finished during the churn
+    leave page-aligned prefixes in the RETAINED pool; defrag renumbers
+    those entries alongside the live mappings."""
     model, params, _ = harness
     sc = ServeConfig(max_batch=3, max_seq=32, max_new_tokens=5, page_size=2,
                      prefill_chunk=2)
@@ -723,7 +725,8 @@ def test_defrag_compacts_to_prefix(harness):
     live = pe.kv.live_pages
     distinct = sorted({p for o in pe.kv.owned for p in o})
     assert distinct == list(range(1, live + 1))
-    assert sorted(pe.kv.free) == list(range(live + 1, pe.kv.num_pages))
+    kept = live + len(pe.kv._retained_only())
+    assert sorted(pe.kv.free) == list(range(kept + 1, pe.kv.num_pages))
     res = pe.run()                               # still drains correctly
     assert len(res) == 5
 
@@ -845,3 +848,188 @@ def test_fuzz_pending_cow_never_targets_free_page(harness):
         kv.check()
         assert kv.live_pages == 0, f"trial {trial} leaked"
         assert len(kv.free) == kv.num_pages - 1
+
+# ---------------------------------------------------------------------------
+# cross-lifetime retained prefix pool (serve/cache.py RetainedPrefix)
+# ---------------------------------------------------------------------------
+
+def test_retained_reshare_bit_identical_after_donor_death(harness):
+    """The tentpole property: a follower submitted AFTER its donor fully
+    drained adopts the donor's frozen pages BY REFERENCE — same physical
+    page ids, bit-identical K/V rows — and its output is token-identical
+    to a cold oracle run (request-relative rope makes the frozen rows
+    exact for any adopter)."""
+    model, params, oracle = harness
+    sc = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4, page_size=4,
+                     prefill_chunk=2)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(41)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=11).astype(np.int32)
+    pe.submit(prompt)
+    pe.run()                               # donor finishes and is FREED
+    assert not pe.busy and pe.kv.live_pages == 0
+    assert pe.kv.retained, "finished donor left nothing in the retained pool"
+    # the donor retains its FULL history prefix (prompt + emitted); the
+    # follower's prompt only reaches the prompt's page-aligned part
+    entry = pe.kv.retained[-1]
+    ret_pages = list(entry.pages)
+    rows_before = np.asarray(pe.kv.k)[:, ret_pages].copy()
+    rid = pe.submit(prompt)                # donor is DEAD; only digests match
+    pe._admit()
+    assert pe.kv.retained_hits == 1
+    n_hit = (len(prompt) // 4) * 4
+    assert pe.kv.retained_hit_tokens == n_hit
+    # adoption is by reference: the follower's table maps the SAME pages
+    slot = next(i for i, s in enumerate(pe.slots) if s.active)
+    assert pe.kv.owned[slot][:n_hit // 4] == ret_pages[:n_hit // 4]
+    np.testing.assert_array_equal(
+        rows_before, np.asarray(pe.kv.k)[:, ret_pages],
+        err_msg="adoption mutated frozen retained rows")
+    res = pe.run()
+    want = oracle.generate_batch([prompt], max_new_tokens=4)[0]
+    _assert_tokens_identical(res[rid], want,
+                             label="retained re-share vs oracle")
+    _assert_drained_clean(pe)
+
+
+def test_reclaim_never_touches_adopted_pages(harness):
+    """Reclamation under pressure must skip entries whose pages a live
+    slot just re-shared (adoption bumps refcount, so the entry frees
+    nothing) and drop only genuinely idle entries."""
+    model, _, _ = harness
+    kv = PagedKVCache(model, 3, 32, page_size=4, num_pages=10, retain=True)
+    toks_a = list(range(8))
+    kv.ensure(0, 8); kv.length[0] = 8
+    kv.free_slot(0, retain_tokens=toks_a)          # entry A: 2 pages
+    toks_b = list(range(100, 108))
+    kv.ensure(0, 8); kv.length[0] = 8
+    kv.free_slot(0, retain_tokens=toks_b)          # entry B: 2 pages
+    kv.check()
+    assert len(kv.retained) == 2
+    entry_a, n = kv.match_retained(np.asarray(toks_a, np.int32), 32)
+    assert entry_a is not None and n == 8
+    kv.adopt_retained(1, entry_a, 8)               # A's pages live again
+    kv.check()
+    freed = kv.reclaim_retained(100)               # demand the whole pool
+    assert freed == 2                              # only B's pages freed
+    assert entry_a in kv.retained                  # A survived: adopted
+    assert (kv.refcount[entry_a.pages] == 1).all()
+    kv.check()
+    # once the adopter dies, A's pages are retained-only again and A is
+    # reclaimable
+    kv.free_slot(1)
+    assert kv.reclaim_retained(100) == 2
+    assert not kv.retained
+    kv.check()
+    assert len(kv.free) == kv.num_pages - 1
+
+
+def test_seize_drains_warm_retained_pool(harness):
+    """A fault-plan squeeze deeper than the free list must seize straight
+    through the retained pool without corrupting the digest map: entries
+    are dropped cleanly (later lookups miss), seized pages release back to
+    the free list whole."""
+    model, _, _ = harness
+    kv = PagedKVCache(model, 2, 32, page_size=4, num_pages=8, retain=True)
+    toks = list(range(12))
+    kv.ensure(0, 12); kv.length[0] = 12
+    kv.free_slot(0, retain_tokens=toks)            # 3 retained pages
+    kv.check()
+    n_free = len(kv.free)
+    seized = kv.seize_pages(n_free + 2)            # MUST drain retention
+    assert len(seized) == n_free + 2
+    assert kv.retained_reclaimed_pages >= 2
+    kv.check()                                     # digest map consistent
+    entry, n = kv.match_retained(np.asarray(toks, np.int32), 32)
+    assert entry is None and n == 0                # dropped entries miss
+    kv.release_pages(seized)
+    kv.check()
+    assert len(kv.free) == kv.num_pages - 1
+
+
+def test_retain_policies_order_reclamation(harness):
+    """"lru" evicts the oldest-touched entry first; "popularity" evicts
+    the fewest-adoptions entry first even when it is the youngest."""
+    model, _, _ = harness
+    for policy, survivor in (("lru", "young"), ("popularity", "popular")):
+        kv = PagedKVCache(model, 2, 64, page_size=4, num_pages=12,
+                          retain=True, retain_policy=policy)
+        toks_old = list(range(4))
+        toks_young = list(range(50, 54))
+        kv.ensure(0, 4); kv.length[0] = 4
+        kv.free_slot(0, retain_tokens=toks_old)
+        if policy == "popularity":
+            # make the OLD entry popular: adopt + release it once
+            e, n = kv.match_retained(np.asarray(toks_old, np.int32), 64)
+            kv.adopt_retained(1, e, 4)
+            kv.free_slot(1)
+        kv.ensure(0, 4); kv.length[0] = 4
+        kv.free_slot(0, retain_tokens=toks_young)
+        kv.check()
+        assert kv.reclaim_retained(1) == 1         # drop exactly one entry
+        kept = kv.retained[0].tokens
+        if survivor == "young":
+            assert kept == toks_young, "lru must drop the oldest entry"
+        else:
+            assert kept == toks_old, \
+                "popularity must keep the adopted (popular) entry"
+        kv.check()
+
+
+def test_retain_cap_bounds_idle_pages(harness):
+    """``retain_cap`` bounds retained-ONLY pages: retaining past the cap
+    evicts older entries instead of growing the idle set."""
+    model, _, _ = harness
+    kv = PagedKVCache(model, 2, 64, page_size=4, num_pages=16,
+                      retain=True, retain_cap=2)
+    for base in (0, 100, 200):
+        kv.ensure(0, 8); kv.length[0] = 8
+        kv.free_slot(0, retain_tokens=list(range(base, base + 8)))
+        kv.check()
+        assert len(kv._retained_only()) <= 2
+    # the newest entry is the survivor
+    assert kv.retained and kv.retained[-1].tokens == list(range(200, 208))
+
+
+def test_retained_survives_defrag(harness):
+    """Defrag renumbers retained entries' pages alongside live mappings:
+    the digest lookup still hits afterwards and the adopted content is
+    bit-identical to the pre-defrag rows."""
+    model, params, oracle = harness
+    sc = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4, page_size=4,
+                     prefill_chunk=2)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(43)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=9).astype(np.int32)
+    pe.submit(prompt)
+    pe.run()
+    assert pe.kv.retained
+    entry = pe.kv.retained[-1]
+    rows_before = np.asarray(pe.kv.k)[:, entry.pages].copy()
+    pe.defrag()
+    pe.kv.check()
+    np.testing.assert_array_equal(
+        rows_before, np.asarray(pe.kv.k)[:, entry.pages],
+        err_msg="defrag lost retained page content")
+    rid = pe.submit(prompt)
+    pe._admit()
+    assert pe.kv.retained_hits == 1, "digest lookup broken after defrag"
+    res = pe.run()
+    want = oracle.generate_batch([prompt], max_new_tokens=4)[0]
+    _assert_tokens_identical(res[rid], want,
+                             label="post-defrag retained re-share")
+
+
+def test_retention_off_restores_legacy_drain(harness):
+    """``retain_prefixes=False`` keeps the pre-retention contract: a
+    finished slot's pages go straight back to the free list."""
+    model, params, _ = harness
+    sc = ServeConfig(max_batch=2, max_seq=48, max_new_tokens=4, page_size=4,
+                     prefill_chunk=2, retain_prefixes=False)
+    pe = PagedEngine(model, params, sc)
+    rng = np.random.RandomState(44)
+    pe.submit(rng.randint(0, model.cfg.vocab_size, size=9).astype(np.int32))
+    pe.run()
+    assert not pe.kv.retained
+    assert len(pe.kv.free) == pe.kv.num_pages - 1
+    pe.kv.check()
