@@ -126,6 +126,22 @@ OVERLOAD = dict(arch="granite-8b", batch=4, max_seq=96, requests=16,
 COLD_PREFIX = dict(arch="granite-8b", batch=2, max_seq=320, sys_prompt=256,
                    tail_lo=4, tail_hi=8, out=8, requests=6,
                    page_size=16, prefill_chunk=4, prefill_chunk_tokens=64)
+# int8 quantized KV pages (--scenario ragged --kv-dtype int8): the SAME
+# ragged drive at kv_dtype=int8 vs bf16 pools (tokens/s floor 0.9x), the
+# exact token identity of the TWO quantized write paths (prefill lane vs
+# prefill-by-decode — identical appended rows quantize identically, so the
+# streams must match token-for-token), and the census-pinned byte claim.
+# The census runs on a d_head=64 / float32-compute measurement config: at
+# the smoke d_head of 16 the f32 scale rows would blur the per-row byte
+# advantage ((16+4)/32 = 0.63 best case), and f32 compute keeps the CPU
+# backend from wrapping pool scatters in whole-pool converts (same hygiene
+# as the tier-1 census tests).  hbm bytes are compared as the SLOPE over
+# block-table width (nb 2 -> 8 at fixed pool) — the live-token-
+# proportional traffic the page sweep moves, with weight/FFN traffic
+# (constant in nb) subtracted out — and pool-size independence is
+# re-asserted on the int8 program (pool 33 vs 65 at equal live tokens)
+INT8 = dict(census_d_head=64, census_page=16, census_batch=2,
+            census_nb_lo=2, census_nb_hi=8, census_pools=(33, 65))
 
 
 def _model(arch):
@@ -343,6 +359,113 @@ def run_ragged() -> Dict[str, float]:
         "ragged_page_util_max": u["util_max"],
         "ragged_page_occupancy_mean": u["occupancy_mean"],
         "ragged_paged_stalls": p["stalls"],
+    }
+
+
+def _census_hbm(kv_dtype: str):
+    """Compiled-program HBM byte census of one paged decode step at the
+    int8-measurement config (d_head=64, f32 compute — see the INT8 config
+    comment).  Returns (slope, pool_independent): slope is the live-token-
+    proportional byte traffic hbm(nb_hi) - hbm(nb_lo) at the big pool;
+    pool_independent re-asserts that doubling the POOL at fixed nb moves
+    zero extra bytes on this program."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.configs import get
+    from repro.core.hlo_counters import census_from_compiled
+    from repro.models import get_model
+    c = INT8
+    cfg = dataclasses.replace(get(RAGGED["arch"]).reduced(),
+                              dtype="float32", d_head=c["census_d_head"],
+                              kv_dtype=kv_dtype)
+    model = get_model(cfg)
+    B, page = c["census_batch"], c["census_page"]
+
+    def hbm(nb, pool):
+        cache = model.abstract_paged_cache(B, nb, page, pool)
+        compiled = jax.jit(lambda p, t, cc: model.decode_step_paged(p, t, cc),
+                           donate_argnums=(2,)).lower(
+            model.abstract_params(),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32), cache).compile()
+        cen = census_from_compiled(compiled)
+        return cen.hbm_bytes, cen.irregular_bytes
+
+    pool_lo, pool_hi = c["census_pools"]
+    base, base_irr = hbm(c["census_nb_lo"], pool_hi)
+    hi_all, hi_irr = hbm(c["census_nb_hi"], pool_hi)
+    small, _ = hbm(c["census_nb_lo"], pool_lo)
+    # the POOL-resident traffic is the irregular (gather) slice of the
+    # slope: the CPU backend materializes the dequantized f32 pages as a
+    # regular intermediate, which dilutes the total-HBM ratio without
+    # touching a single extra pool byte
+    return hi_all - base, hi_irr - base_irr, small == base
+
+
+def run_ragged_int8() -> Dict[str, float]:
+    """Quantized KV pages: the ragged drive on int8 pools vs bf16 pools
+    (same weights, same workload), the exact token identity of the two
+    quantized WRITE paths (prefill lane vs prefill-by-decode), the
+    census-pinned per-live-token byte ratio, and the resident-token
+    capacity ratio from the engines' own page_bytes."""
+    from repro.serve.engine import PagedEngine, ServeConfig
+    r = RAGGED
+    cfg, model, params = _model(r["arch"])
+    import dataclasses
+    from repro.models import get_model
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    model8 = get_model(cfg8)          # same weights: kv_dtype only touches
+    rng = np.random.RandomState(0)    # the cache decls, never the params
+    reqs = _ragged_requests(cfg, rng)
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+
+    def scfg(**over):
+        return ServeConfig(max_batch=r["batch"], max_seq=r["max_seq"],
+                           page_size=r["page_size"],
+                           prefill_chunk=r["prefill_chunk"], **over)
+
+    engines = {}
+    drives = {}
+    for name, m in (("bf16", model), ("int8", model8)):
+        pe = PagedEngine(m, params, scfg())
+        _drive(pe, warm)                             # compile
+        drives[name] = max((_drive(pe, reqs) for _ in range(2)),
+                           key=lambda s: s["tokens_per_s"])
+        engines[name] = pe
+
+    # write-path identity: the prefill LANE quantizes a whole ragged chunk
+    # of rows at once, prefill-by-decode quantizes the same rows one tick
+    # at a time — per-row scales make those bit-identical, so the emitted
+    # streams must match token-for-token
+    def emitted(lane):
+        pe = PagedEngine(model8, params, scfg(prefill_lane=lane))
+        rids = [pe.submit(p, mnt) for p, mnt in reqs]
+        pe.run()
+        return [[int(t) for t in pe.results[i]] for i in rids]
+
+    identity = emitted(True) == emitted(False)
+
+    slope8, pool8, indep8 = _census_hbm("int8")
+    slope_wide, pool_wide, indep_wide = _census_hbm("bf16")
+
+    p8, pb = drives["int8"], drives["bf16"]
+    return {
+        "int8_tokens": p8["tokens"],
+        "int8_tokens_per_s": p8["tokens_per_s"],
+        "int8_tokens_per_s_bf16": pb["tokens_per_s"],
+        "int8_bf16_tokens_ratio": (p8["tokens_per_s"]
+                                   / max(pb["tokens_per_s"], 1e-9)),
+        "int8_token_identity": float(identity),
+        "int8_hbm_slope": float(slope8),
+        "int8_hbm_slope_wide": float(slope_wide),
+        "int8_hbm_ratio": slope8 / max(slope_wide, 1),
+        "int8_pool_bytes_slope": float(pool8),
+        "int8_pool_bytes_slope_wide": float(pool_wide),
+        "int8_pool_bytes_ratio": pool8 / max(pool_wide, 1),
+        "int8_pool_independent": float(indep8 and indep_wide),
+        "int8_page_bytes": float(engines["int8"].kv.page_bytes),
+        "int8_page_bytes_bf16": float(engines["bf16"].kv.page_bytes),
+        "int8_capacity_ratio": (engines["bf16"].kv.page_bytes
+                                / engines["int8"].kv.page_bytes),
     }
 
 
@@ -647,6 +770,20 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"mean={stats['ragged_page_util_mean']:.2f}"
             f"/max={stats['ragged_page_util_max']:.2f}",
         ]
+    if "int8_tokens_per_s" in stats:
+        lines += [
+            f"serve/ragged-int8,0,"
+            f"tokens_per_s={stats['int8_tokens_per_s']:.1f}",
+            f"serve/ragged-int8-vs-bf16,0,"
+            f"x{stats['int8_bf16_tokens_ratio']:.2f}",
+            f"serve/int8-pool-bytes,0,"
+            f"ratio={stats['int8_pool_bytes_ratio']:.2f}"
+            f"/hbm_ratio={stats['int8_hbm_ratio']:.2f}"
+            f"/pool_independent={stats['int8_pool_independent']:.0f}",
+            f"serve/int8-capacity,0,"
+            f"x{stats['int8_capacity_ratio']:.2f}"
+            f"/token_identity={stats['int8_token_identity']:.0f}",
+        ]
     if "long_decode_tokens_per_s" in stats:
         lines += [
             f"serve/long-decode,0,"
@@ -737,11 +874,20 @@ def main() -> int:
                          "repeated system prompt whose donor fully drained "
                          "before the followers arrive — cross-lifetime "
                          "retained-page sharing vs a retention-off engine")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
+                    help="int8 + --scenario ragged runs the quantized-KV "
+                         "comparison (int8 vs bf16 pools on the ragged "
+                         "workload, write-path token identity, census byte "
+                         "ratio) and writes the ragged_int8 section instead "
+                         "of re-measuring the bf16 ragged section")
     args = ap.parse_args()
+    int8_run = args.kv_dtype == "int8" and args.scenario in ("ragged", "all")
     stats: Dict[str, float] = {}
     if args.scenario in ("smoke", "all"):
         stats.update(run())
-    if args.scenario in ("ragged", "all"):
+    if int8_run:
+        stats.update(run_ragged_int8())
+    elif args.scenario in ("ragged", "all"):
         stats.update(run_ragged())
     if args.scenario in ("shared-prefix", "all"):
         stats.update(run_shared())
@@ -777,7 +923,11 @@ def main() -> int:
                 "fused_speedup": stats["fused_speedup"],
                 "continuous_tokens_per_s": stats["continuous_tokens_per_s"],
             })
-        if args.scenario in ("ragged", "all"):
+        if int8_run:
+            record["ragged_int8"] = dict(
+                config=dict(RAGGED, **INT8),
+                **{k: stats[k] for k in stats if k.startswith("int8_")})
+        elif args.scenario in ("ragged", "all"):
             record["ragged"] = dict(
                 config=RAGGED,
                 **{k: stats[k] for k in stats if k.startswith("ragged_")})

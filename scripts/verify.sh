@@ -28,6 +28,11 @@ echo "[verify] CPU smoke serve_bench (all scenarios)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     run_capped python benchmarks/serve_bench.py --json --scenario all
 
+echo "[verify] CPU smoke serve_bench (quantized KV pages)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    run_capped python benchmarks/serve_bench.py --json --scenario ragged \
+    --kv-dtype int8
+
 echo "[verify] HLO census throughput"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     run_capped python benchmarks/census_bench.py --json
@@ -66,6 +71,7 @@ GATED = [
     "long_prompt.long_prompt_tokens_per_s_lane",
     "overload.overload_goodput_tokens_per_s",
     "cold_prefix.cold_prefix_tokens_per_s",
+    "ragged_int8.int8_tokens_per_s",
     "census.lines_per_s",
 ]
 # per-tick overheads must not climb above ceiling x committed — the
@@ -197,6 +203,41 @@ if cch is not None and cch != 0:
     print(f"  [REGRESSION] retention-OFF engine reported retained hits "
           f"({cch:.2f}) — the baseline is not actually cold")
     failed.append("cold_prefix_cold_baseline_clean")
+# quantized KV pages (acceptance criteria): pool-resident byte traffic per
+# live token (irregular/gather slope of the decode-step census over block-
+# table width) must be <= 0.6x the bf16 pool's (measured ~0.27 against the
+# f32-compute measurement config; theoretical (hd+4)/(4*hd) at d_head=64),
+# the SAME program must stay pool-size independent, tokens/s on the ragged
+# workload must hold >= 0.9x the bf16 engine (a HARD floor, not in GATED
+# as a ratio: two wall-clock runs under contention), and the two quantized
+# WRITE paths (prefill lane vs prefill-by-decode) must emit token-
+# identical streams — per-row scales make their appended rows bit-equal
+pbr = get(new, "ragged_int8.int8_pool_bytes_ratio")
+if pbr is not None and pbr > 0.6:
+    print(f"  [REGRESSION] int8 pool-byte ratio {pbr:.2f} > 0.6 "
+          f"(quantized pages stopped shrinking per-live-token traffic)")
+    failed.append("int8_pool_bytes_ceiling")
+pin = get(new, "ragged_int8.int8_pool_independent")
+if pin is not None and pin != 1:
+    print(f"  [REGRESSION] int8 census pool-independence flag {pin:.0f} "
+          f"!= 1 (decode-step bytes moved with POOL size, not live tokens)")
+    failed.append("int8_pool_independence")
+tr = get(new, "ragged_int8.int8_bf16_tokens_ratio")
+if tr is not None and tr < 0.9:
+    print(f"  [REGRESSION] int8/bf16 tokens/s ratio {tr:.2f} < 0.9 "
+          f"(quantized pools cost more than a tenth of throughput)")
+    failed.append("int8_tokens_ratio_floor")
+ti = get(new, "ragged_int8.int8_token_identity")
+if ti is not None and ti != 1:
+    print(f"  [REGRESSION] int8 write-path token identity {ti:.0f} != 1 "
+          f"(prefill lane and prefill-by-decode quantized the same rows "
+          f"differently)")
+    failed.append("int8_write_path_identity")
+cap = get(new, "ragged_int8.int8_capacity_ratio")
+if cap is not None and cap < 1.5:
+    print(f"  [REGRESSION] int8 resident-token capacity ratio {cap:.2f} "
+          f"< 1.5 (page_bytes stopped reflecting the quantized pool)")
+    failed.append("int8_capacity_floor")
 
 if failed:
     print(f"[verify] FAILED: {failed}")

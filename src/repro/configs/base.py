@@ -65,6 +65,11 @@ class ArchConfig:
                                      # size; keep it a MULTIPLE of the page
                                      # size so chunk grants stay page-
                                      # aligned)
+    kv_dtype: str = "bf16"           # paged KV page pools: "bf16" (pools in
+                                     # the model compute dtype) | "int8"
+                                     # (quantized pools + per-row-per-head
+                                     # f32 scales, dequantized inside the
+                                     # page sweep)
     attn_chunk_q: int = 1024
     attn_chunk_kv: int = 1024
     ssm_chunk: int = 256
@@ -81,6 +86,13 @@ class ArchConfig:
     @property
     def param_dtype(self):
         return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def kv_quantized(self) -> bool:
+        if self.kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {self.kv_dtype!r}")
+        return self.kv_dtype == "int8"
 
     @property
     def is_attention_free(self) -> bool:

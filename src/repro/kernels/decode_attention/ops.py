@@ -36,14 +36,19 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_table: jax.Array,
                            kv_len: jax.Array, layer=0,
                            pages_per_step: int = 1,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            interpret: Optional[bool] = None) -> jax.Array:
     """q (B, 1, H, D); k_pool, v_pool (L, num_pages, page, KV, D) stacked
     pools (4D single-layer accepted); block_table (B, max_blocks) int32
     (page 0 = reserved null page); kv_len (B,) int32 per-slot token counts;
     layer — pool layer to address; pages_per_step — page-list blocking
-    factor (P pages swept per grid step).  Returns (B, 1, H, D)."""
+    factor (P pages swept per grid step); k_scale, v_scale — optional
+    (L, num_pages, page, KV) f32 per-row scales for int8 pools.
+    Returns (B, 1, H, D)."""
     return _paged.paged_decode_attention_fwd(
         q, k_pool, v_pool, block_table, kv_len, layer,
+        k_scale=k_scale, v_scale=v_scale,
         pages_per_step=pages_per_step,
         interpret=_auto_interpret(interpret))
 
@@ -52,6 +57,8 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, block_table: jax.Array,
                             base_len: jax.Array, new_len: jax.Array,
                             layer=0,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None,
                             interpret: Optional[bool] = None) -> jax.Array:
     """Ragged multi-token paged prefill: q (B, T, H, D) chunk (its K/V
     rows already scattered into the pool); k_pool, v_pool
@@ -59,7 +66,9 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
     block_table (B, max_blocks) int32 (page 0 = reserved null page);
     base_len (B,) int32 tokens resident before the chunk; new_len (B,)
     int32 = base_len + granted chunk tokens; layer — pool layer to
-    address.  Returns (B, T, H, D)."""
+    address; k_scale, v_scale — optional (L, num_pages, page, KV) f32
+    per-row scales for int8 pools.  Returns (B, T, H, D)."""
     return _prefill.paged_prefill_attention_fwd(
         q, k_pool, v_pool, block_table, base_len, new_len, layer,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=_auto_interpret(interpret))

@@ -66,12 +66,20 @@ def padded_blocks(num_blocks: int, pages_per_step: int) -> int:
 
 
 def _kernel(kvlen_ref, tbl_ref, layer_ref, q_ref, *refs, scale: float,
-            page: int, num_steps: int, pages_per_step: int):
+            page: int, num_steps: int, pages_per_step: int,
+            quantized: bool):
     P = pages_per_step
     k_refs = refs[:P]
     v_refs = refs[P:2 * P]
-    o_ref = refs[2 * P]
-    m_scr, l_scr, acc_scr = refs[2 * P + 1:]
+    if quantized:                        # int8 pages + per-row f32 scales
+        ks_refs = refs[2 * P:3 * P]
+        vs_refs = refs[3 * P:4 * P]
+        rest = refs[4 * P:]
+    else:
+        ks_refs = vs_refs = (None,) * P
+        rest = refs[2 * P:]
+    o_ref = rest[0]
+    m_scr, l_scr, acc_scr = rest[1:]
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -84,7 +92,7 @@ def _kernel(kvlen_ref, tbl_ref, layer_ref, q_ref, *refs, scale: float,
     kv_len = kvlen_ref[b]
     q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
 
-    def _sweep(p, k_ref, v_ref):
+    def _sweep(p, k_ref, v_ref, ks_ref, vs_ref):
         # logical block j*P + p holds positions [bj*page, (bj+1)*page):
         # live iff it overlaps [0, kv_len) — per-slot positions start at 0
         bj = j * P + p
@@ -93,6 +101,9 @@ def _kernel(kvlen_ref, tbl_ref, layer_ref, q_ref, *refs, scale: float,
         def _body():
             k = k_ref[0, 0, :, 0].astype(jnp.float32)    # (page, D)
             v = v_ref[0, 0, :, 0].astype(jnp.float32)
+            if quantized:                # dequantize in the f32 accumulator
+                k = k * ks_ref[0, 0, :, 0][:, None]
+                v = v * vs_ref[0, 0, :, 0][:, None]
             s = jax.lax.dot_general(
                 q, k, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32) * scale   # (G, page)
@@ -110,7 +121,7 @@ def _kernel(kvlen_ref, tbl_ref, layer_ref, q_ref, *refs, scale: float,
             m_scr[...] = m_new
 
     for p in range(P):                   # unrolled page-list sweep
-        _sweep(p, k_refs[p], v_refs[p])
+        _sweep(p, k_refs[p], v_refs[p], ks_refs[p], vs_refs[p])
 
     @pl.when(j == num_steps - 1)
     def _finalize():
@@ -122,6 +133,8 @@ def paged_decode_attention_fwd(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_table: jax.Array,
                                kv_len: jax.Array,
                                layer: jax.Array | int = 0, *,
+                               k_scale: jax.Array | None = None,
+                               v_scale: jax.Array | None = None,
                                pages_per_step: int = 1,
                                interpret: bool = False) -> jax.Array:
     """q (B, 1, H, D); k_pool, v_pool (L, num_pages, page, KV, D) stacked
@@ -129,13 +142,20 @@ def paged_decode_attention_fwd(q: jax.Array, k_pool: jax.Array,
     block_table (B, max_blocks) int32 physical page ids (0 = reserved null
     page for unallocated blocks); kv_len (B,) int32 per-slot token counts
     (positions >= kv_len[b] are masked); layer — which pool layer to
-    address (the layer-scan trip counter); pages_per_step — pages swept
-    per grid step (1 = the original one-page grid).  Returns (B, 1, H, D).
+    address (the layer-scan trip counter); k_scale, v_scale — optional
+    (L, num_pages, page, KV) f32 per-row-per-head scales for int8 pools
+    (each page's scale rows ride the same scalar-prefetched address as the
+    page itself; int8 tiles are upcast and scaled inside the f32
+    online-softmax accumulator); pages_per_step — pages swept per grid
+    step (1 = the original one-page grid).  Returns (B, 1, H, D).
     """
     B, S, H, D = q.shape
     assert S == 1, "paged decode kernel is single-token"
+    quantized = k_scale is not None
     if k_pool.ndim == 4:
         k_pool, v_pool = k_pool[None], v_pool[None]
+        if quantized:
+            k_scale, v_scale = k_scale[None], v_scale[None]
     _, num_pages, page, KV, _ = k_pool.shape
     NB = block_table.shape[1]
     P = max(1, pages_per_step)
@@ -158,10 +178,21 @@ def paged_decode_attention_fwd(q: jax.Array, k_pool: jax.Array,
             return (lay_ref[0], tbl_ref[b * NBp + j * P + p], 0, h, 0)
         return index_map
 
+    def _scale_map(p):
+        # scale rows of the same physical page (no head-dim axis)
+        def index_map(b, h, j, kvl_ref, tbl_ref, lay_ref):
+            return (lay_ref[0], tbl_ref[b * NBp + j * P + p], 0, h)
+        return index_map
+
     page_spec = [pl.BlockSpec((1, 1, page, 1, D), _page_map(p))
                  for p in range(P)]
+    scale_spec = [pl.BlockSpec((1, 1, page, 1), _scale_map(p))
+                  for p in range(P)]
+    scale_ins = ([*scale_spec, *scale_spec] if quantized else [])
+    scale_args = (([k_scale] * P + [v_scale] * P) if quantized else [])
     kernel = functools.partial(_kernel, scale=scale, page=page,
-                               num_steps=steps, pages_per_step=P)
+                               num_steps=steps, pages_per_step=P,
+                               quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -171,6 +202,7 @@ def paged_decode_attention_fwd(q: jax.Array, k_pool: jax.Array,
                 pl.BlockSpec((1, 1, G, D), lambda b, h, j, *_: (b, h, 0, 0)),
                 *page_spec,                       # k pages 0..P-1
                 *page_spec,                       # v pages 0..P-1
+                *scale_ins,                       # k then v scales (int8)
             ],
             out_specs=pl.BlockSpec((1, 1, G, D),
                                    lambda b, h, j, *_: (b, h, 0, 0)),
@@ -182,5 +214,5 @@ def paged_decode_attention_fwd(q: jax.Array, k_pool: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
-    )(kvl, tbl, lay, qg, *([k_pool] * P), *([v_pool] * P))
+    )(kvl, tbl, lay, qg, *([k_pool] * P), *([v_pool] * P), *scale_args)
     return out.reshape(B, 1, H, D)

@@ -60,8 +60,14 @@ NEG_INF = -1e30
 
 
 def _kernel(base_ref, len_ref, tbl_ref, layer_ref, q_ref, k_ref, v_ref,
-            o_ref, m_scr, l_scr, acc_scr, *, scale: float, page: int,
-            num_blocks: int, groups: int):
+            *refs, scale: float, page: int, num_blocks: int, groups: int,
+            quantized: bool):
+    if quantized:                        # int8 pages + per-row f32 scales
+        ks_ref, vs_ref = refs[0], refs[1]
+        o_ref, m_scr, l_scr, acc_scr = refs[2:]
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -81,6 +87,9 @@ def _kernel(base_ref, len_ref, tbl_ref, layer_ref, q_ref, k_ref, v_ref,
     def _body():
         k = k_ref[0, 0, :, 0].astype(jnp.float32)        # (page, D)
         v = v_ref[0, 0, :, 0].astype(jnp.float32)
+        if quantized:                    # dequantize in the f32 accumulator
+            k = k * ks_ref[0, 0, :, 0][:, None]
+            v = v * vs_ref[0, 0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (T*G, page)
@@ -110,6 +119,8 @@ def paged_prefill_attention_fwd(q: jax.Array, k_pool: jax.Array,
                                 v_pool: jax.Array, block_table: jax.Array,
                                 base_len: jax.Array, new_len: jax.Array,
                                 layer: jax.Array | int = 0, *,
+                                k_scale: jax.Array | None = None,
+                                v_scale: jax.Array | None = None,
                                 interpret: bool = False) -> jax.Array:
     """q (B, T, H, D) — the chunk's query block (its K/V rows must already
     be scattered into the pool); k_pool, v_pool (L, num_pages, page, KV, D)
@@ -118,11 +129,16 @@ def paged_prefill_attention_fwd(q: jax.Array, k_pool: jax.Array,
     base_len (B,) int32 tokens resident before the chunk; new_len (B,)
     int32 = base_len + granted chunk tokens (rows past a slot's grant are
     masked like the oracle and ignored by the caller); layer — which pool
-    layer to address.  Returns (B, T, H, D).
+    layer to address; k_scale, v_scale — optional (L, num_pages, page, KV)
+    f32 per-row-per-head scales for int8 pools, dequantized inside the
+    page sweep.  Returns (B, T, H, D).
     """
     B, T, H, D = q.shape
+    quantized = k_scale is not None
     if k_pool.ndim == 4:
         k_pool, v_pool = k_pool[None], v_pool[None]
+        if quantized:
+            k_scale, v_scale = k_scale[None], v_scale[None]
     _, num_pages, page, KV, _ = k_pool.shape
     NB = block_table.shape[1]
     G = H // KV
@@ -140,8 +156,15 @@ def paged_prefill_attention_fwd(q: jax.Array, k_pool: jax.Array,
     def _page_map(b, h, j, base_ref, len_ref, tbl_ref, lay_ref):
         return (lay_ref[0], tbl_ref[b * NB + j], 0, h, 0)
 
+    def _scale_map(b, h, j, base_ref, len_ref, tbl_ref, lay_ref):
+        # scale rows of the same physical page (no head-dim axis)
+        return (lay_ref[0], tbl_ref[b * NB + j], 0, h)
+
+    scale_spec = pl.BlockSpec((1, 1, page, 1), _scale_map)
+    scale_ins = ([scale_spec, scale_spec] if quantized else [])
+    scale_args = ([k_scale, v_scale] if quantized else [])
     kernel = functools.partial(_kernel, scale=scale, page=page,
-                               num_blocks=NB, groups=G)
+                               num_blocks=NB, groups=G, quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -151,6 +174,7 @@ def paged_prefill_attention_fwd(q: jax.Array, k_pool: jax.Array,
                 pl.BlockSpec((1, 1, TG, D), lambda b, h, j, *_: (b, h, 0, 0)),
                 pl.BlockSpec((1, 1, page, 1, D), _page_map),
                 pl.BlockSpec((1, 1, page, 1, D), _page_map),
+                *scale_ins,                       # k then v scales (int8)
             ],
             out_specs=pl.BlockSpec((1, 1, TG, D),
                                    lambda b, h, j, *_: (b, h, 0, 0)),
@@ -162,6 +186,6 @@ def paged_prefill_attention_fwd(q: jax.Array, k_pool: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, TG, D), q.dtype),
         interpret=interpret,
-    )(base, kvl, tbl, lay, qg, k_pool, v_pool)
+    )(base, kvl, tbl, lay, qg, k_pool, v_pool, *scale_args)
     out = out.reshape(B, KV, T, G, D).transpose(0, 2, 1, 3, 4)
     return out.reshape(B, T, H, D)

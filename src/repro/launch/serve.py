@@ -61,6 +61,13 @@ def main() -> int:
                          "swept per grid step (cuts grid steps by P for "
                          "long slots; only meaningful with the pallas "
                          "attention impl)")
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"),
+                    help="paged KV page pool storage: bf16 (model compute "
+                         "dtype) or int8 (quantized pools + per-row f32 "
+                         "scales dequantized inside the page sweep — "
+                         "~halves the sweep's HBM bytes and ~doubles "
+                         "resident tokens per HBM byte, at a bounded "
+                         "logit drift)")
     ap.add_argument("--max-queue", type=int, default=0,
                     help="bounded admission: reject submits once this many "
                          "requests are waiting (0 = unbounded); rejected "
@@ -108,6 +115,11 @@ def main() -> int:
         ap.error("--deadline-ticks must be >= 0 (0 = no deadline)")
     if args.retain_pool_pages < 0:
         ap.error("--retain-pool-pages must be >= 0 (0 = pool-bounded)")
+    if args.kv_dtype == "int8" and args.whole_batch:
+        ap.error("--kv-dtype int8 quantizes the PAGED page pools (the "
+                 "Pallas/reference paged attention path); the whole-batch "
+                 "dense cache has no page pool to quantize — drop "
+                 "--whole-batch or use --kv-dtype bf16")
     if args.no_prefix_sharing and not args.no_retain_prefixes:
         print("[launch.serve] NOTE: --no-prefix-sharing disables the "
               "donor index, so cross-lifetime retention is off too "
@@ -139,9 +151,10 @@ def main() -> int:
     cfg = configs.get(args.arch)
     if args.local_smoke:
         cfg = cfg.reduced()
-    if args.pages_per_step != 1:
+    if args.pages_per_step != 1 or args.kv_dtype != "bf16":
         import dataclasses
-        cfg = dataclasses.replace(cfg, pages_per_step=args.pages_per_step)
+        cfg = dataclasses.replace(cfg, pages_per_step=args.pages_per_step,
+                                  kv_dtype=args.kv_dtype)
     if args.sys_prompt_tokens % args.page_size:
         print(f"[launch.serve] NOTE: sys prompt ({args.sys_prompt_tokens} "
               f"tokens) is not page-aligned (page {args.page_size}) — every "
@@ -187,6 +200,15 @@ def main() -> int:
         return 0
 
     engine = PagedEngine(model, params, scfg)
+    # pool capacity banner: resident tokens per HBM byte is the quantized-
+    # pool payoff (int8 + per-row f32 scales vs 2-byte bf16 rows)
+    tok_bytes = engine.kv.page_bytes / engine.kv.page
+    pool_bytes = engine.kv.num_pages * engine.kv.page_bytes
+    print(f"[launch.serve] pool: kv_dtype={args.kv_dtype}, "
+          f"{engine.kv.num_pages} pages x {args.page_size} tokens, "
+          f"{engine.kv.page_bytes} B/page ({tok_bytes:.1f} B/token, "
+          f"{1.0 / tok_bytes:.4f} resident tokens per HBM byte, "
+          f"{pool_bytes / 1e6:.2f} MB pool)")
     # shared system prompt + per-request tail: the prefix-sharing showcase.
     # Budgets are STAGGERED so early slots outlive late admissions — a
     # joiner only shares pages while a donor is still resident

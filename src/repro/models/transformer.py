@@ -25,6 +25,7 @@ from repro.configs.base import ArchConfig
 from repro.dist.sharding import constrain
 from repro.models import ssm as ssm_mod
 from repro.models.attention import attention, direct_attention
+from repro.models.kv_quant import quantize_rows
 from repro.models.layers import (
     apply_rope, dense, embed, gelu_mlp, layernorm, mrope_angles, rmsnorm,
     rope_angles, sinusoidal_positions, swiglu, unembed)
@@ -251,7 +252,7 @@ def attn_decode(h, p, cfg: ArchConfig, rope, k_cache, v_cache, pos,
 
 
 def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
-                      table, lengths, active):
+                      table, lengths, active, k_scale=None, v_scale=None):
     """decode path over the paged KV pool: h (B, 1, d); k_pool/v_pool are
     the STACKED (L, num_pages, page, KV, hd) pools — appended to and
     gathered from with an explicit (layer, page) scatter/gather so no
@@ -275,7 +276,11 @@ def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     another table still exposes.  Reads need no such care: rope positions
     are request-relative, so the K/V rows of an identical token prefix are
     bit-identical whichever slot computed them, and rows past a sharer's
-    ``length`` in a shared trailing page are masked by its own kv_len."""
+    ``length`` in a shared trailing page are masked by its own kv_len.
+
+    With quantized pools (k_scale/v_scale not None) the appended row is
+    int8-quantized per KV head and the row's f32 scale lands at the same
+    (layer, page, row) address — the scale travels with its page."""
     hn = apply_norm(h, p["ln1"], cfg)
     a = p["attn"]
     q, k, v = _qkv(hn, a, cfg, rope, decode=True)
@@ -285,8 +290,18 @@ def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     blk = jnp.minimum(lengths // page, nb - 1)
     phys = jnp.where(active, table[jnp.arange(B), blk], 0)
     off = lengths % page
-    k_pool = k_pool.at[layer, phys, off].set(k[:, 0].astype(k_pool.dtype))
-    v_pool = v_pool.at[layer, phys, off].set(v[:, 0].astype(v_pool.dtype))
+    if k_scale is not None:                # quantize the appended row
+        kq, ks = quantize_rows(k[:, 0])    # (B, KV, hd) int8, (B, KV) f32
+        vq, vs = quantize_rows(v[:, 0])
+        k_pool = k_pool.at[layer, phys, off].set(kq)
+        v_pool = v_pool.at[layer, phys, off].set(vq)
+        k_scale = k_scale.at[layer, phys, off].set(ks)
+        v_scale = v_scale.at[layer, phys, off].set(vs)
+        k_scale = constrain(k_scale, None, "cache_seq", None, None)
+        v_scale = constrain(v_scale, None, "cache_seq", None, None)
+    else:
+        k_pool = k_pool.at[layer, phys, off].set(k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[layer, phys, off].set(v[:, 0].astype(v_pool.dtype))
     # keep the pool page-sharded through the in-place update
     k_pool = constrain(k_pool, None, "cache_seq", None, None, None)
     v_pool = constrain(v_pool, None, "cache_seq", None, None, None)
@@ -294,18 +309,20 @@ def attn_decode_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     if cfg.attention_impl == "pallas":
         from repro.kernels.decode_attention.ops import paged_decode_attention
         out = paged_decode_attention(q, k_pool, v_pool, table, kv_len, layer,
-                                     pages_per_step=cfg.pages_per_step)
+                                     pages_per_step=cfg.pages_per_step,
+                                     k_scale=k_scale, v_scale=v_scale)
     else:
         from repro.kernels.decode_attention.ref import (
             paged_decode_attention_ref)
         out = paged_decode_attention_ref(q, k_pool, v_pool, table, kv_len,
-                                         layer)
+                                         layer, k_scale=k_scale,
+                                         v_scale=v_scale)
     out = dense(out.reshape(B, 1, -1), a["wo"])
-    return out, k_pool, v_pool
+    return out, k_pool, v_pool, k_scale, v_scale
 
 
 def attn_prefill_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
-                       table, base, new_len):
+                       table, base, new_len, k_scale=None, v_scale=None):
     """Ragged multi-token CHUNKED-PREFILL path over the paged KV pool:
     h (B, T, d) — a chunk of up to T prompt tokens per slot; base (B,)
     int32 tokens resident before the chunk; new_len (B,) int32 = base +
@@ -339,24 +356,36 @@ def attn_prefill_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
     off = (tok_pos % page).reshape(B * T)
     phys = phys.reshape(B * T)
     KV, hd = k.shape[2], k.shape[3]
-    k_pool = k_pool.at[layer, phys, off].set(
-        k.reshape(B * T, KV, hd).astype(k_pool.dtype))
-    v_pool = v_pool.at[layer, phys, off].set(
-        v.reshape(B * T, KV, hd).astype(v_pool.dtype))
+    if k_scale is not None:                # quantize all the chunk's rows
+        kq, ks = quantize_rows(k.reshape(B * T, KV, hd))
+        vq, vs = quantize_rows(v.reshape(B * T, KV, hd))
+        k_pool = k_pool.at[layer, phys, off].set(kq)
+        v_pool = v_pool.at[layer, phys, off].set(vq)
+        k_scale = k_scale.at[layer, phys, off].set(ks)
+        v_scale = v_scale.at[layer, phys, off].set(vs)
+        k_scale = constrain(k_scale, None, "cache_seq", None, None)
+        v_scale = constrain(v_scale, None, "cache_seq", None, None)
+    else:
+        k_pool = k_pool.at[layer, phys, off].set(
+            k.reshape(B * T, KV, hd).astype(k_pool.dtype))
+        v_pool = v_pool.at[layer, phys, off].set(
+            v.reshape(B * T, KV, hd).astype(v_pool.dtype))
     # keep the pool page-sharded through the in-place update
     k_pool = constrain(k_pool, None, "cache_seq", None, None, None)
     v_pool = constrain(v_pool, None, "cache_seq", None, None, None)
     if cfg.attention_impl == "pallas":
         from repro.kernels.decode_attention.ops import paged_prefill_attention
         out = paged_prefill_attention(q, k_pool, v_pool, table, base,
-                                      new_len, layer)
+                                      new_len, layer,
+                                      k_scale=k_scale, v_scale=v_scale)
     else:
         from repro.kernels.decode_attention.ref import (
             paged_prefill_attention_ref)
         out = paged_prefill_attention_ref(q, k_pool, v_pool, table, base,
-                                          new_len, layer)
+                                          new_len, layer, k_scale=k_scale,
+                                          v_scale=v_scale)
     out = dense(out.reshape(B, T, -1), a["wo"])
-    return out, k_pool, v_pool
+    return out, k_pool, v_pool, k_scale, v_scale
 
 
 def ffn_apply(h, p, cfg: ArchConfig):
@@ -610,17 +639,23 @@ def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
     h = _embed_in(params, cfg, tokens)
 
     def body(carry, p):
-        h, k_all, v_all, li = carry
-        out, k_all, v_all = attn_decode_paged(h, p, cfg, rope, k_all, v_all,
-                                              li, table, lengths, active)
+        h, k_all, v_all, ks_all, vs_all, li = carry
+        out, k_all, v_all, ks_all, vs_all = attn_decode_paged(
+            h, p, cfg, rope, k_all, v_all, li, table, lengths, active,
+            k_scale=ks_all, v_scale=vs_all)
         h = h + out
         h = decode_ffn(h, p, cfg)
-        return (h, k_all, v_all, li + 1), None
+        return (h, k_all, v_all, ks_all, vs_all, li + 1), None
 
-    (h, k, v, _), _ = jax.lax.scan(
-        body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
+    # scale pools ride the carry only for quantized pools (None is an empty
+    # pytree, so the bf16 path's carry structure is unchanged)
+    (h, k, v, ks, vs, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], cache.get("k_scale"),
+               cache.get("v_scale"), jnp.int32(0)), params["blocks"])
     new_cache = dict(cache, k=k, v=v,
                      length=lengths + active.astype(jnp.int32))
+    if ks is not None:
+        new_cache.update(k_scale=ks, v_scale=vs)
     return _logits_exact(params, cfg, h)[:, 0], new_cache
 
 
@@ -655,19 +690,23 @@ def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
     h = _embed_in(params, cfg, tokens)
 
     def body(carry, p):
-        h, k_all, v_all, li = carry
-        out, k_all, v_all = attn_prefill_paged(
-            h, p, cfg, rope, k_all, v_all, li, table, lengths, new_len)
+        h, k_all, v_all, ks_all, vs_all, li = carry
+        out, k_all, v_all, ks_all, vs_all = attn_prefill_paged(
+            h, p, cfg, rope, k_all, v_all, li, table, lengths, new_len,
+            k_scale=ks_all, v_scale=vs_all)
         h = h + out
         h = decode_ffn(h, p, cfg)
-        return (h, k_all, v_all, li + 1), None
+        return (h, k_all, v_all, ks_all, vs_all, li + 1), None
 
-    (h, k, v, _), _ = jax.lax.scan(
-        body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
+    (h, k, v, ks, vs, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], cache.get("k_scale"),
+               cache.get("v_scale"), jnp.int32(0)), params["blocks"])
     # last granted position per slot (grants==0 -> clipped; caller ignores)
     last = jnp.maximum(grants - 1, 0)[:, None, None]
     h_last = jnp.take_along_axis(h, last, axis=1)           # (B, 1, d)
     new_cache = dict(cache, k=k, v=v, length=new_len)
+    if ks is not None:
+        new_cache.update(k_scale=ks, v_scale=vs)
     return _logits_exact(params, cfg, h_last)[:, 0], new_cache
 
 
@@ -927,14 +966,20 @@ def paged_cache_decls(cfg: ArchConfig, batch: int, max_blocks: int,
     (prefix sharing; see serve/cache.py for the refcount/COW discipline —
     the device arrays carry no refcounts, only the host manager does).
     The pool is sharded over its page axis ('cache_seq'), the
-    flash-decoding seq-sharding of the dense cache carried over page-wise."""
+    flash-decoding seq-sharding of the dense cache carried over page-wise.
+
+    With ``cfg.kv_dtype == "int8"`` the pools are int8 and the cache grows
+    ``k_scale``/``v_scale`` — (L, num_pages, page, KV) f32 per-row-per-head
+    scales that travel WITH their pages through every copy path (COW,
+    defrag, retained-prefix adoption); see models/kv_quant.py."""
     if cfg.mamba_version or cfg.is_encoder_decoder:
         raise ValueError("paged KV cache requires a decoder-only attention "
                          "LM (per-slot page tables)")
     hd, KV, L = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
     pool_axes = (None, "cache_seq", None, None, None)
-    bf = cfg.param_dtype
-    return {
+    scale_axes = (None, "cache_seq", None, None)
+    bf = jnp.int8 if cfg.kv_quantized else cfg.param_dtype
+    decls = {
         "k": ParamDecl((L, num_pages, page_size, KV, hd), pool_axes,
                        "zeros", bf),
         "v": ParamDecl((L, num_pages, page_size, KV, hd), pool_axes,
@@ -943,3 +988,9 @@ def paged_cache_decls(cfg: ArchConfig, batch: int, max_blocks: int,
                            jnp.int32),
         "length": ParamDecl((batch,), ("batch",), "zeros", jnp.int32),
     }
+    if cfg.kv_quantized:
+        decls["k_scale"] = ParamDecl((L, num_pages, page_size, KV),
+                                     scale_axes, "zeros", jnp.float32)
+        decls["v_scale"] = ParamDecl((L, num_pages, page_size, KV),
+                                     scale_axes, "zeros", jnp.float32)
+    return decls

@@ -113,6 +113,14 @@ def _copy_pages_both(k, v, dst, src):
     return _copy_pages(k, dst, src), _copy_pages(v, dst, src)
 
 
+def _copy_pages_quant(k, v, ks, vs, dst, src):
+    """Quantized COW: k, v AND their per-row scale pools move in the same
+    single dispatch — int8 rows + f32 scales are copied verbatim, so the
+    privatized page is bit-exact (no requantization on the copy path)."""
+    return (_copy_pages(k, dst, src), _copy_pages(v, dst, src),
+            _copy_pages(ks, dst, src), _copy_pages(vs, dst, src))
+
+
 class PagedKVCache:
     """Host-side manager for the paged decode cache (see module docstring)."""
 
@@ -134,6 +142,11 @@ class PagedKVCache:
                                         self.page, self.num_pages)
         self.k = arrays["k"]
         self.v = arrays["v"]
+        # quantized pools (cfg.kv_dtype == "int8") carry per-row-per-head
+        # f32 scale pools that travel WITH their pages through every copy
+        self.k_scale = arrays.get("k_scale")
+        self.v_scale = arrays.get("v_scale")
+        self.quantized = self.k_scale is not None
         self.table = np.zeros((max_batch, self.max_blocks), np.int32)
         self.length = np.zeros((max_batch,), np.int32)
         self.owned: List[List[int]] = [[] for _ in range(max_batch)]
@@ -142,10 +155,17 @@ class PagedKVCache:
         self._gather = jax.jit(lambda pool, perm: pool[:, perm],
                                donate_argnums=(0,))
         self._copy = jax.jit(_copy_pages_both, donate_argnums=(0, 1))
-        # per-page bytes across BOTH pools (the census-checked COW cost)
+        self._copy_quant = jax.jit(_copy_pages_quant,
+                                   donate_argnums=(0, 1, 2, 3))
+        # per-page bytes across BOTH pools (+ scale pools when quantized) —
+        # derived from the ACTUAL pool itemsize so census byte gates stay
+        # exact for any kv_dtype
         L = self.k.shape[0]
         self.page_bytes = 2 * L * self.page * self.k.shape[3] \
             * self.k.shape[4] * self.k.dtype.itemsize
+        if self.quantized:
+            self.page_bytes += 2 * L * self.page * self.k_scale.shape[3] \
+                * self.k_scale.dtype.itemsize
         self.cow_copies = 0
         self.cow_bytes = 0
         self.cow_dispatches = 0          # device copy calls (1 per flush)
@@ -276,7 +296,11 @@ class PagedKVCache:
             return 0
         dst = jnp.asarray([p[0] for p in self._pending_cow], jnp.int32)
         src = jnp.asarray([p[1] for p in self._pending_cow], jnp.int32)
-        self.k, self.v = self._copy(self.k, self.v, dst, src)
+        if self.quantized:               # scales move with their pages
+            (self.k, self.v, self.k_scale, self.v_scale) = self._copy_quant(
+                self.k, self.v, self.k_scale, self.v_scale, dst, src)
+        else:
+            self.k, self.v = self._copy(self.k, self.v, dst, src)
         n = len(self._pending_cow)
         self._pending_cow.clear()
         self.cow_dispatches += 1
@@ -327,11 +351,18 @@ class PagedKVCache:
     def warm_copy(self, sizes: Tuple[int, ...] = (1, 2)) -> None:
         """Pre-compile the batched page copy for the given batch sizes
         (null-page self-copies: page 0 onto page 0) so the common COW
-        flush sizes never pay an XLA compile inside a serving tick.
-        Counters are untouched — this is not a COW."""
+        flush sizes never pay an XLA compile inside a serving tick —
+        compiled against the ACTUAL pool dtype (quantized pools warm the
+        four-pool copy cell).  Counters are untouched — this is not a COW.
+        """
         for n in sizes:
             idx = jnp.zeros((n,), jnp.int32)
-            self.k, self.v = self._copy(self.k, self.v, idx, idx)
+            if self.quantized:
+                (self.k, self.v, self.k_scale,
+                 self.v_scale) = self._copy_quant(
+                    self.k, self.v, self.k_scale, self.v_scale, idx, idx)
+            else:
+                self.k, self.v = self._copy(self.k, self.v, idx, idx)
 
     def cow(self, i: int, blk: int) -> bool:
         """Single-page copy-on-write (reserve + immediate flush) — kept for
@@ -720,4 +751,7 @@ class PagedKVCache:
         perm_dev = jnp.asarray(np.asarray(perm, np.int32))
         self.k = self._gather(self.k, perm_dev)
         self.v = self._gather(self.v, perm_dev)
+        if self.quantized:               # scales renumber with their pages
+            self.k_scale = self._gather(self.k_scale, perm_dev)
+            self.v_scale = self._gather(self.v_scale, perm_dev)
         self.dirty.update(range(self.B))     # every table renumbered

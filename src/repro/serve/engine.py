@@ -1027,6 +1027,9 @@ class PagedEngine:
 
         cache = {"k": self.kv.k, "v": self.kv.v,
                  "table": self._table_dev, "length": self._length_dev}
+        if self.kv.quantized:            # scale pools ride the cache pytree
+            cache["k_scale"] = self.kv.k_scale
+            cache["v_scale"] = self.kv.v_scale
 
         # --- prefill lane: one ragged (B, T) chunk of prompt tokens ------
         nxt = None
@@ -1077,6 +1080,9 @@ class PagedEngine:
             dispatches += 1
         self.kv.k = cache["k"]
         self.kv.v = cache["v"]
+        if self.kv.quantized:
+            self.kv.k_scale = cache["k_scale"]
+            self.kv.v_scale = cache["v_scale"]
         self._table_dev = cache["table"]
         self._length_dev = cache["length"]    # device already advanced it
         self.kv.length += steps + pgr         # host mirror of the increment

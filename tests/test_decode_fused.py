@@ -840,14 +840,16 @@ def test_paged_prefill_census_scales_with_chunk_and_live_tokens():
     assert p_more_chunk.hbm_bytes > 1.5 * p_more_live.hbm_bytes
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
 def test_cow_page_copy_census_scales_with_pages(dtype):
     """The COW page copy's census bytes scale with the pages COPIED, never
     with the pool — standalone (the engine's jitted copy) and with the
     copy fused into an append step.  bf16 exercises the dtype-bracket
     elision: the CPU backend wraps the in-place update in whole-pool
     converts that would otherwise charge 3x the pool per copy (TPU updates
-    the storage dtype natively)."""
+    the storage dtype natively).  int8 pins the quantized page pools: the
+    CPU backend scatters s8 natively (no brackets), and the page-wise
+    accounting must survive at 1-byte granularity."""
     from repro.core.hlo_counters import census_from_compiled
     from repro.serve.cache import _copy_pages
     L, page, KV, hd = 4, 16, 2, 16

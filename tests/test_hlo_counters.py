@@ -199,6 +199,87 @@ ENTRY %main_spmd (param: f32[128,128]) -> f32[128,128] {
 """
 
 
+SYNTH_S8_BRACKET = """
+HloModule synth_s8, is_scheduled=true, entry_computation_layout={(s8[4,64,16],f32[1,1,16],s32[])->s8[4,64,16]}
+
+ENTRY %main (pool: s8[4,64,16], row: f32[1,1,16], i: s32[]) -> s8[4,64,16] {
+  %pool = s8[4,64,16]{2,1,0} parameter(0)
+  %row = f32[1,1,16]{2,1,0} parameter(1)
+  %i = s32[] parameter(2)
+  %c0 = s32[] constant(0)
+  %up = f32[4,64,16]{2,1,0} convert(%pool)
+  %dus = f32[4,64,16]{2,1,0} dynamic-update-slice(%up, %row, %c0, %i, %c0)
+  ROOT %down = s8[4,64,16]{2,1,0} convert(%dus)
+}
+"""
+
+SYNTH_S8_ONEWAY = """
+HloModule synth_s8_oneway, is_scheduled=true, entry_computation_layout={(s8[4,64,16],f32[1,1,16],s32[])->f32[4,64,16]}
+
+ENTRY %main (pool: s8[4,64,16], row: f32[1,1,16], i: s32[]) -> f32[4,64,16] {
+  %pool = s8[4,64,16]{2,1,0} parameter(0)
+  %row = f32[1,1,16]{2,1,0} parameter(1)
+  %i = s32[] parameter(2)
+  %c0 = s32[] constant(0)
+  %up = f32[4,64,16]{2,1,0} convert(%pool)
+  ROOT %dus = f32[4,64,16]{2,1,0} dynamic-update-slice(%up, %row, %c0, %i, %c0)
+}
+"""
+
+
+def test_s8_dtype_bracket_elision_matched_pair():
+    """The dtype-bracket matcher is narrow-dtype generic: an s8->f32
+    upcast straight off a parameter paired with a same-shape f32->s8
+    downcast at the root (the shape a backend without native s8 scatter
+    would emit around a quantized-pool update) is elided — BOTH converts,
+    nothing else."""
+    from repro.core.hlo_counters import (_dtype_bracket_elisions,
+                                         parse_module)
+    comps, entry = parse_module(SYNTH_S8_BRACKET)
+    elide = _dtype_bracket_elisions(comps[entry], comps)
+    assert elide == {"up", "down"}
+    # and the census actually drops their whole-pool bytes: only the
+    # update slice + row traffic remains, not 2x the f32 pool
+    from repro.core.hlo_counters import census_from_text
+    census = census_from_text(SYNTH_S8_BRACKET)
+    pool_f32 = 4 * 64 * 16 * 4
+    assert census.hbm_bytes < 2 * pool_f32
+
+
+def test_s8_one_way_cast_still_counted():
+    """A genuine one-way s8->f32 upcast (dequantization for compute, no
+    same-shape downcast partner) must STAY counted — eliding it would hide
+    real dequant traffic from the quantized-pool byte model."""
+    from repro.core.hlo_counters import (_dtype_bracket_elisions,
+                                         census_from_text, parse_module)
+    comps, entry = parse_module(SYNTH_S8_ONEWAY)
+    assert _dtype_bracket_elisions(comps[entry], comps) == set()
+    census = census_from_text(SYNTH_S8_ONEWAY)
+    pool_s8 = 4 * 64 * 16
+    # the convert reads the s8 pool and writes the f32 copy at minimum
+    assert census.hbm_bytes >= 5 * pool_s8
+
+
+def test_int8_pool_update_census_pool_independent():
+    """Compiled-program regression for the quantized append: an in-place
+    int8 row update (the quantize write path's pool op) moves bytes
+    independent of the POOL size on this backend — whether the lowering
+    scatters s8 natively (CPU today) or brackets in converts (elided)."""
+    def upd(pool, row, p):
+        return pool.at[0, p, 3].set(row)
+
+    def census(P):
+        pool = jax.ShapeDtypeStruct((2, P, 8, 2, 16), jnp.int8)
+        row = jax.ShapeDtypeStruct((2, 16), jnp.int8)
+        c = jax.jit(upd, donate_argnums=(0,)).lower(
+            pool, row, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        return census_from_compiled(c)
+
+    small, big = census(33), census(65)
+    assert big.hbm_bytes == small.hbm_bytes
+    assert small.hbm_bytes < 2 * 8 * 2 * 16 * 4   # a page's worth, not a pool
+
+
 def test_synthetic_collective_census():
     from repro.core.hlo_counters import census_from_text
     census = census_from_text(SYNTH)
