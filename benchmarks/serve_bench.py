@@ -4,7 +4,7 @@ decode_32k cells' runnable counterpart).
 Scenarios
 (``--scenario
 smoke|ragged|shared-prefix|long-decode|long-prompt|overload|cold-prefix|
-all``):
+speculative|all``):
 
   * smoke — the fused device-resident ``decode_many`` loop against the
     legacy per-token host loop (both with donated caches), plus the paged
@@ -59,6 +59,15 @@ all``):
     Records the retained hit rate (gated to 1.0), re-shared tokens, a
     TTFT proxy (ticks per request) and the warm-vs-cold tokens/s speedup
     (gated >= 1.5).
+  * speculative — draft-and-verify multi-token decode ticks on the
+    long-decode workload: a 1-layer DRAFT proposes spec_k tokens per
+    tick, a deepened target verifies the window in ONE ragged prefill-
+    lane dispatch and keeps the accepted prefix + bonus token.  The
+    target is doctored so every block past the first is a residual
+    no-op, pinning the accept rate at 1.0 — the recorded speedup is the
+    machinery's ceiling at the config's target/draft cost ratio, not a
+    model-quality artifact.  Gates: tokens/s >= 1.3x the same engine
+    speculating off, BIT-IDENTICAL token streams, zero crashed ticks.
 
 ``--json`` writes BENCH_serve.json so the perf trajectory is tracked across
 PRs (scripts/verify.sh gates on it).
@@ -126,6 +135,29 @@ OVERLOAD = dict(arch="granite-8b", batch=4, max_seq=96, requests=16,
 COLD_PREFIX = dict(arch="granite-8b", batch=2, max_seq=320, sys_prompt=256,
                    tail_lo=4, tail_hi=8, out=8, requests=6,
                    page_size=16, prefill_chunk=4, prefill_chunk_tokens=64)
+# speculative decoding: the long-decode workload (few slots x long
+# generations — the regime speculation targets: ~90% pure-decode ticks)
+# with a 1-LAYER draft proposing spec_k tokens per tick and a deepened
+# `layers`-block target verifying the window in one ragged prefill-lane
+# dispatch.  The target is DOCTORED so every block past the first is a
+# residual no-op (attn wo and ffn w_down zeroed): the draft (= the
+# doctored target's first layer + shared embed/ln_f) then agrees with
+# the target exactly, pinning accept_rate at 1.0 — the bench measures
+# the SPECULATION MACHINERY's ceiling, not a model-quality artifact that
+# would jitter across PRs.  The deepening matters for the same reason a
+# real deployment drafts with a small model: speculation trades k cheap
+# draft steps + one ragged verify against k+1 FULL target steps, so the
+# win scales with the target/draft cost ratio — at the 2-layer smoke
+# depth the plain engine's own 8-step fused decode ticks are already
+# host-bound and there is nothing left to save (measured 0.74x), while
+# the 6-layer doctored target is compute-bound and the same machinery
+# clears ~1.9x (same measurement-config reasoning as the int8 census).
+# The doctored blocks still burn full-depth FLOPs; they just cannot
+# change the function, so both sides of the comparison decode the SAME
+# weights and the gate pins bit-identical token streams.
+SPECULATIVE = dict(arch="granite-8b", layers=6, batch=2, max_seq=256,
+                   requests=4, prompt=8, out=96, page_size=16,
+                   prefill_chunk=8, spec_k=4)
 # int8 quantized KV pages (--scenario ragged --kv-dtype int8): the SAME
 # ragged drive at kv_dtype=int8 vs bf16 pools (tokens/s floor 0.9x), the
 # exact token identity of the TWO quantized write paths (prefill lane vs
@@ -677,6 +709,98 @@ def run_overload() -> Dict[str, float]:
     }
 
 
+def run_speculative() -> Dict[str, float]:
+    """Speculative decoding: draft-and-verify multi-token decode ticks on
+    the long-decode workload, against the SAME engine with speculation
+    off.  Every target block past the first is doctored into a residual
+    no-op so the 1-layer draft slice agrees with the deepened target
+    exactly (accept_rate pinned at 1.0 — see the SPECULATIVE config
+    comment); both engines decode the doctored weights, so the comparison
+    isolates the machinery.  Gates: bit-identical token streams, zero
+    crashed ticks, and the tokens/s speedup floor (verify.sh pins
+    >= 1.3x)."""
+    import dataclasses
+    from repro.configs import get
+    from repro.models import get_model
+    from repro.serve.engine import PagedEngine, ServeConfig
+    S = SPECULATIVE
+    cfg = dataclasses.replace(get(S["arch"]).reduced(),
+                              n_layers=S["layers"])
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    # doctor blocks 1..L-1 into residual no-ops: attn output proj and ffn
+    # down proj zeroed -> those blocks contribute nothing to the residual
+    # stream (but still cost full-depth compute on the target side)
+    blocks = dict(params["blocks"])
+    blocks["attn"] = dict(blocks["attn"],
+                          wo=blocks["attn"]["wo"].at[1:].set(0))
+    blocks["ffn"] = dict(blocks["ffn"],
+                         w_down=blocks["ffn"]["w_down"].at[1:].set(0))
+    params = dict(params, blocks=blocks)
+    dcfg = dataclasses.replace(cfg, n_layers=1)
+    dmodel = get_model(dcfg)
+    dparams = dict(params)
+    dparams["blocks"] = jax.tree.map(lambda x: x[:1], params["blocks"])
+
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, cfg.vocab_size,
+                         size=S["prompt"]).astype(np.int32), S["out"])
+            for _ in range(S["requests"])]
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+
+    def mk(spec_k):
+        return PagedEngine(
+            model, params,
+            ServeConfig(max_batch=S["batch"], max_seq=S["max_seq"],
+                        page_size=S["page_size"],
+                        prefill_chunk=S["prefill_chunk"],
+                        spec_k=spec_k, trace_pool=False),
+            draft_model=dmodel if spec_k else None,
+            draft_params=dparams if spec_k else None)
+
+    stats, outs, engines = {}, {}, {}
+    crashed = 0
+    for name, k in (("spec", S["spec_k"]), ("plain", 0)):
+        pe = mk(k)
+        try:
+            _drive(pe, warm)                         # compile all cells
+            stats[name] = max((_drive(pe, reqs) for _ in range(2)),
+                              key=lambda s: s["tokens_per_s"])
+            # untimed identity drive on the same engine (results persist)
+            rids = [pe.submit(p, mnt) for p, mnt in reqs]
+            pe.run()
+            outs[name] = [[int(t) for t in pe.results[r]] for r in rids]
+        except Exception:
+            crashed += 1                             # gated to stay 0
+            stats[name] = {"tokens": 0.0, "tokens_per_s": 0.0, "ticks": 0.0}
+            outs[name] = None
+        engines[name] = pe
+
+    sp, pl = stats["spec"], stats["plain"]
+    pe = engines["spec"]
+    identity = outs["spec"] is not None and outs["spec"] == outs["plain"]
+    ddisp = pe.draft_dispatch_trace
+    vdisp = pe.verify_dispatch_trace
+    return {
+        "speculative_tokens": sp["tokens"],
+        "speculative_tokens_per_s": sp["tokens_per_s"],
+        "speculative_tokens_per_s_plain": pl["tokens_per_s"],
+        "speculative_speedup": (sp["tokens_per_s"]
+                                / max(pl["tokens_per_s"], 1e-9)),
+        "speculative_accept_rate": pe.accept_rate,
+        "speculative_token_identity": float(identity),
+        "speculative_crashed_ticks": float(crashed),
+        "speculative_ticks": sp["ticks"],
+        "speculative_ticks_plain": pl["ticks"],
+        "speculative_tokens_per_tick": sp["tokens"] / max(sp["ticks"], 1.0),
+        "speculative_draft_dispatches_per_tick": (float(np.mean(ddisp))
+                                                  if ddisp else 0.0),
+        "speculative_verify_dispatches_per_tick": (float(np.mean(vdisp))
+                                                   if vdisp else 0.0),
+        "speculative_trunc_tokens": float(pe.spec_trunc_tokens),
+    }
+
+
 def run_cold_prefix() -> Dict[str, float]:
     """Cross-lifetime prefix retention: followers repeating a dead donor's
     256-token system prompt, submitted strictly AFTER the donor drained
@@ -826,6 +950,24 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"crashed_ticks={stats['overload_crashed_ticks']:.0f}"
             f"/all_terminal={stats['overload_all_terminal']:.0f}",
         ]
+    if "speculative_tokens_per_s" in stats:
+        lines += [
+            f"serve/speculative,0,"
+            f"tokens_per_s={stats['speculative_tokens_per_s']:.1f}",
+            f"serve/speculative-plain,0,"
+            f"tokens_per_s={stats['speculative_tokens_per_s_plain']:.1f}",
+            f"serve/speculative-speedup,0,"
+            f"x{stats['speculative_speedup']:.2f}",
+            f"serve/speculative-accept,0,"
+            f"rate={stats['speculative_accept_rate']:.2f}"
+            f"/tokens_per_tick={stats['speculative_tokens_per_tick']:.2f}",
+            f"serve/speculative-safety,0,"
+            f"token_identity={stats['speculative_token_identity']:.0f}"
+            f"/crashed_ticks={stats['speculative_crashed_ticks']:.0f}",
+            f"serve/speculative-dispatches,0,"
+            f"draft={stats['speculative_draft_dispatches_per_tick']:.2f}"
+            f"/verify={stats['speculative_verify_dispatches_per_tick']:.2f}",
+        ]
     if "cold_prefix_tokens_per_s" in stats:
         lines += [
             f"serve/cold-prefix,0,"
@@ -860,7 +1002,7 @@ def main() -> int:
     ap.add_argument("--scenario",
                     choices=("smoke", "ragged", "shared-prefix",
                              "long-decode", "long-prompt", "overload",
-                             "cold-prefix", "all"),
+                             "cold-prefix", "speculative", "all"),
                     default="all",
                     help="smoke: fused-vs-loop decode; ragged: paged vs "
                          "dense waves under mixed lengths; shared-prefix: "
@@ -873,7 +1015,12 @@ def main() -> int:
                          "goodput under preempt-and-recompute; cold-prefix: "
                          "repeated system prompt whose donor fully drained "
                          "before the followers arrive — cross-lifetime "
-                         "retained-page sharing vs a retention-off engine")
+                         "retained-page sharing vs a retention-off engine; "
+                         "speculative: draft-and-verify multi-token decode "
+                         "ticks (accept rate pinned at 1.0 by a doctored "
+                         "target) vs the same engine speculating off — "
+                         "bit-identical streams gated, speedup floor "
+                         "gated in verify.sh")
     ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
                     help="int8 + --scenario ragged runs the quantized-KV "
                          "comparison (int8 vs bf16 pools on the ragged "
@@ -899,6 +1046,8 @@ def main() -> int:
         stats.update(run_overload())
     if args.scenario in ("cold-prefix", "all"):
         stats.update(run_cold_prefix())
+    if args.scenario in ("speculative", "all"):
+        stats.update(run_speculative())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
@@ -958,6 +1107,11 @@ def main() -> int:
                 config=COLD_PREFIX,
                 **{k: stats[k] for k in stats
                    if k.startswith("cold_prefix_")})
+        if args.scenario in ("speculative", "all"):
+            record["speculative"] = dict(
+                config=SPECULATIVE,
+                **{k: stats[k] for k in stats
+                   if k.startswith("speculative_")})
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

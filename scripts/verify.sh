@@ -72,6 +72,7 @@ GATED = [
     "overload.overload_goodput_tokens_per_s",
     "cold_prefix.cold_prefix_tokens_per_s",
     "ragged_int8.int8_tokens_per_s",
+    "speculative.speculative_tokens_per_s",
     "census.lines_per_s",
 ]
 # per-tick overheads must not climb above ceiling x committed — the
@@ -238,6 +239,40 @@ if cap is not None and cap < 1.5:
     print(f"  [REGRESSION] int8 resident-token capacity ratio {cap:.2f} "
           f"< 1.5 (page_bytes stopped reflecting the quantized pool)")
     failed.append("int8_capacity_floor")
+# speculative decoding (acceptance criteria): greedy draft-and-verify is
+# EXACT by construction, so the spec and plain engines must emit bit-
+# identical token streams regardless of accept rate; the doctored bench
+# target pins accept_rate at 1.0 (a drop means the verify/accept math
+# broke, not the draft quality); no tick may raise; and the machinery
+# must clear >= 1.3x tokens/s over the same engine speculating off
+# (measured ~1.5-1.9x on the 6-layer doctored target; a HARD floor, not
+# in GATED as a ratio: two wall-clock runs swing under contention)
+ss = get(new, "speculative.speculative_speedup")
+if ss is not None and ss < 1.3:
+    print(f"  [REGRESSION] speculative speedup {ss:.2f} < 1.3 "
+          f"(draft-and-verify lost its win over plain decode ticks)")
+    failed.append("speculative_speedup_floor")
+sti = get(new, "speculative.speculative_token_identity")
+if sti is not None and sti != 1:
+    print(f"  [REGRESSION] speculative token identity {sti:.0f} != 1 "
+          f"(greedy speculation emitted a different stream than plain "
+          f"decode — the accept/truncate/rollback math is broken)")
+    failed.append("speculative_token_identity")
+sct = get(new, "speculative.speculative_crashed_ticks")
+if sct is not None and sct != 0:
+    print(f"  [REGRESSION] speculative crashed_ticks {sct:.0f} != 0 "
+          f"(a draft/verify tick raised)")
+    failed.append("speculative_crashed_ticks_zero")
+sar = get(new, "speculative.speculative_accept_rate")
+if sar is not None and sar < 0.99:
+    print(f"  [REGRESSION] speculative accept rate {sar:.2f} < 0.99 "
+          f"(the doctored target must accept every proposal — the "
+          f"verify window or draft rollback desynced)")
+    failed.append("speculative_accept_rate_floor")
+if get(new, "speculative.speculative_tokens_per_s") is not None and \
+        sar is None:
+    print("  [REGRESSION] speculative section missing accept_rate")
+    failed.append("speculative_accept_rate_missing")
 
 if failed:
     print(f"[verify] FAILED: {failed}")

@@ -70,6 +70,12 @@ class ArchConfig:
                                      # (quantized pools + per-row-per-head
                                      # f32 scales, dequantized inside the
                                      # page sweep)
+    draft_arch: str = ""             # speculative decoding: registry id of
+                                     # the DRAFT model ("" = none); the
+                                     # draft must share this arch's
+                                     # tokenizer (equal vocab_size) — its
+                                     # paged KV pool rides next to the
+                                     # target's
     attn_chunk_q: int = 1024
     attn_chunk_kv: int = 1024
     ssm_chunk: int = 256

@@ -57,6 +57,7 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, block_table: jax.Array,
                             base_len: jax.Array, new_len: jax.Array,
                             layer=0,
+                            pages_per_step: int = 1,
                             k_scale: Optional[jax.Array] = None,
                             v_scale: Optional[jax.Array] = None,
                             interpret: Optional[bool] = None) -> jax.Array:
@@ -66,9 +67,11 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
     block_table (B, max_blocks) int32 (page 0 = reserved null page);
     base_len (B,) int32 tokens resident before the chunk; new_len (B,)
     int32 = base_len + granted chunk tokens; layer — pool layer to
-    address; k_scale, v_scale — optional (L, num_pages, page, KV) f32
-    per-row scales for int8 pools.  Returns (B, T, H, D)."""
+    address; pages_per_step — page-list blocking factor (P pages swept
+    per grid step); k_scale, v_scale — optional (L, num_pages, page, KV)
+    f32 per-row scales for int8 pools.  Returns (B, T, H, D)."""
     return _prefill.paged_prefill_attention_fwd(
         q, k_pool, v_pool, block_table, base_len, new_len, layer,
         k_scale=k_scale, v_scale=v_scale,
+        pages_per_step=pages_per_step,
         interpret=_auto_interpret(interpret))

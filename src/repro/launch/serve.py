@@ -68,6 +68,19 @@ def main() -> int:
                          "~halves the sweep's HBM bytes and ~doubles "
                          "resident tokens per HBM byte, at a bounded "
                          "logit drift)")
+    ap.add_argument("--draft-arch", default="",
+                    help="speculative decoding: registry id of the DRAFT "
+                         "model (must share the target's tokenizer / "
+                         "vocab size); proposes --spec-k tokens per "
+                         "decode tick from its own paged KV pool, the "
+                         "target verifies the window in ONE ragged "
+                         "prefill-lane dispatch")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft proposals per decode tick (0 = off). A "
+                         "tick keeps the accepted prefix plus one bonus "
+                         "token, so a slot advances 1..k+1 tokens per "
+                         "verify dispatch; greedy output is BIT-IDENTICAL "
+                         "to plain decode regardless of accept rate")
     ap.add_argument("--max-queue", type=int, default=0,
                     help="bounded admission: reject submits once this many "
                          "requests are waiting (0 = unbounded); rejected "
@@ -115,6 +128,23 @@ def main() -> int:
         ap.error("--deadline-ticks must be >= 0 (0 = no deadline)")
     if args.retain_pool_pages < 0:
         ap.error("--retain-pool-pages must be >= 0 (0 = pool-bounded)")
+    if args.spec_k < 0:
+        ap.error("--spec-k must be >= 0 (draft proposals per decode tick)")
+    if args.spec_k and not args.draft_arch:
+        ap.error("--spec-k needs --draft-arch (a draft model proposes the "
+                 "tokens the target verifies)")
+    if args.draft_arch and not args.spec_k:
+        ap.error("--draft-arch without --spec-k does nothing; pass "
+                 "--spec-k >= 1 to enable speculative decoding")
+    if args.spec_k and args.whole_batch:
+        ap.error("speculative decoding is a paged-engine mode (draft pages "
+                 "+ ragged verify); drop --whole-batch")
+    if args.spec_k and args.no_prefill_lane:
+        ap.error("speculative verify rides the ragged prefill lane; drop "
+                 "--no-prefill-lane")
+    if args.spec_k and args.temperature != 0.0:
+        ap.error("speculative decoding is greedy-only (acceptance compares "
+                 "argmax tokens); use --temperature 0")
     if args.kv_dtype == "int8" and args.whole_batch:
         ap.error("--kv-dtype int8 quantizes the PAGED page pools (the "
                  "Pallas/reference paged attention path); the whole-batch "
@@ -151,10 +181,12 @@ def main() -> int:
     cfg = configs.get(args.arch)
     if args.local_smoke:
         cfg = cfg.reduced()
-    if args.pages_per_step != 1 or args.kv_dtype != "bf16":
+    if (args.pages_per_step != 1 or args.kv_dtype != "bf16"
+            or args.draft_arch):
         import dataclasses
         cfg = dataclasses.replace(cfg, pages_per_step=args.pages_per_step,
-                                  kv_dtype=args.kv_dtype)
+                                  kv_dtype=args.kv_dtype,
+                                  draft_arch=args.draft_arch)
     if args.sys_prompt_tokens % args.page_size:
         print(f"[launch.serve] NOTE: sys prompt ({args.sys_prompt_tokens} "
               f"tokens) is not page-aligned (page {args.page_size}) — every "
@@ -163,6 +195,17 @@ def main() -> int:
               f"sharing")
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
+    draft_model = draft_params = None
+    if args.spec_k:
+        dcfg = configs.get(args.draft_arch)
+        if args.local_smoke:
+            dcfg = dcfg.reduced()
+        if dcfg.vocab_size != cfg.vocab_size:
+            ap.error(f"--draft-arch {args.draft_arch!r} has vocab "
+                     f"{dcfg.vocab_size}, target has {cfg.vocab_size} — "
+                     f"speculation needs a shared tokenizer")
+        draft_model = get_model(dcfg)
+        draft_params = draft_model.init(jax.random.key(1))
     # 2x batch requests of (prompt<=16 + new_tokens) tokens each; the paged
     # engine recycles pages across requests so max_seq only bounds ONE
     # request's span, not the engine's lifetime
@@ -185,7 +228,8 @@ def main() -> int:
                        preempt=not args.no_preempt,
                        preempt_policy=args.preempt_policy,
                        max_queue=args.max_queue,
-                       deadline_ticks=args.deadline_ticks)
+                       deadline_ticks=args.deadline_ticks,
+                       spec_k=args.spec_k)
     rng = np.random.RandomState(0)
 
     if args.whole_batch:
@@ -199,16 +243,26 @@ def main() -> int:
               f"across {len(outs)} requests ({mode})")
         return 0
 
-    engine = PagedEngine(model, params, scfg)
+    engine = PagedEngine(model, params, scfg,
+                         draft_model=draft_model, draft_params=draft_params)
     # pool capacity banner: resident tokens per HBM byte is the quantized-
-    # pool payoff (int8 + per-row f32 scales vs 2-byte bf16 rows)
+    # pool payoff (int8 + per-row f32 scales vs 2-byte bf16 rows); a draft
+    # pool, when speculating, is extra HBM the speedup has to pay for
     tok_bytes = engine.kv.page_bytes / engine.kv.page
     pool_bytes = engine.kv.num_pages * engine.kv.page_bytes
+    draft_bytes = (engine.dkv.num_pages * engine.dkv.page_bytes
+                   if engine.dkv is not None else 0)
     print(f"[launch.serve] pool: kv_dtype={args.kv_dtype}, "
           f"{engine.kv.num_pages} pages x {args.page_size} tokens, "
           f"{engine.kv.page_bytes} B/page ({tok_bytes:.1f} B/token, "
           f"{1.0 / tok_bytes:.4f} resident tokens per HBM byte, "
-          f"{pool_bytes / 1e6:.2f} MB pool)")
+          f"{pool_bytes / 1e6:.2f} MB pool"
+          + (f" + {draft_bytes / 1e6:.2f} MB draft pool" if draft_bytes
+             else "") + ")")
+    if args.spec_k:
+        print(f"[launch.serve] speculative: draft={args.draft_arch} "
+              f"k={args.spec_k} (a decode tick verifies k+1 = "
+              f"{args.spec_k + 1} positions in one ragged dispatch)")
     # shared system prompt + per-request tail: the prefix-sharing showcase.
     # Budgets are STAGGERED so early slots outlive late admissions — a
     # joiner only shares pages while a donor is still resident
@@ -244,6 +298,13 @@ def main() -> int:
           f"{engine.rejected} rejected, "
           f"{engine.deadline_exceeded} deadline-exceeded; statuses "
           + ", ".join(f"{k}={v}" for k, v in n_status.items() if v))
+    if args.spec_k:
+        print(f"[launch.serve] speculative: accept rate "
+              f"{engine.accept_rate:.2f} ({engine.spec_accepted}/"
+              f"{engine.spec_proposed} proposals), "
+              f"{engine.draft_dispatches} draft + "
+              f"{engine.verify_dispatches} verify dispatches, "
+              f"{engine.spec_trunc_tokens} rejected K/V rows truncated")
     return 0
 
 

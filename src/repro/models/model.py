@@ -213,6 +213,26 @@ class Model:
         nxt, key = sample_token(logits, key, temperature)
         return nxt, cache, key
 
+    def verify_many_paged(self, params, tokens, cache, grants):
+        """The engine's speculative VERIFY cell: one ragged prefill-lane
+        step over tokens (B, T) = [feed, p_1 .. p_{k}] per slot (grants
+        (B,) int32 = 1 + proposals granted, 0 = idle) that unembeds ALL T
+        positions at f32 and reduces the accepted prefix on device.
+
+        Greedy-only by design: a proposal is accepted iff it EQUALS the
+        target's greedy argmax at its position, so the emitted stream
+        ``greedy[:, :accept + 1]`` is bit-identical to plain greedy
+        decode and no PRNG is consumed (the engine refuses speculation at
+        temperature > 0).
+
+        Returns (greedy (B, T) int32, accept (B,) int32, cache with
+        length advanced by the FULL grant — the host rolls rejected rows
+        back by truncating ``length``)."""
+        cfg = self.cfg
+        if not cfg.embed_inputs:
+            cfg = dataclasses.replace(cfg, embed_inputs=True)
+        return T.lm_verify_paged(params, cfg, tokens, cache, grants)
+
     def decode_many_paged(self, params, tokens, cache, key, active,
                           forced_tok=None, forced_mask=None, *,
                           num_steps: int, temperature: float = 0.0):

@@ -377,6 +377,7 @@ def attn_prefill_paged(h, p, cfg: ArchConfig, rope, k_pool, v_pool, layer,
         from repro.kernels.decode_attention.ops import paged_prefill_attention
         out = paged_prefill_attention(q, k_pool, v_pool, table, base,
                                       new_len, layer,
+                                      pages_per_step=cfg.pages_per_step,
                                       k_scale=k_scale, v_scale=v_scale)
     else:
         from repro.kernels.decode_attention.ref import (
@@ -659,7 +660,8 @@ def lm_decode_paged(params, cfg: ArchConfig, tokens, cache, active):
     return _logits_exact(params, cfg, h)[:, 0], new_cache
 
 
-def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
+def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants,
+                     unembed_all: bool = False):
     """Ragged multi-token paged prefill: tokens (B, T) int32 — each slot's
     next chunk of prompt tokens (row i's first ``grants[i]`` entries are
     real; the rest are pad the masks ignore); cache as in
@@ -674,7 +676,10 @@ def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
     prompt token) — the unembed cost stays chunk-size independent.
 
     Returns (logits (B, V) at position grants-1 per slot, new cache with
-    length advanced by grants).  Decoder-only attention LMs only."""
+    length advanced by grants).  With ``unembed_all`` every chunk position
+    is unembedded instead — logits (B, T, V) at f32, the shape a
+    speculative verify consumes (each position decides a token there).
+    Decoder-only attention LMs only."""
     if cfg.mamba_version or cfg.is_encoder_decoder:
         raise ValueError("paged prefill requires a decoder-only attention "
                          "LM")
@@ -701,13 +706,58 @@ def lm_prefill_paged(params, cfg: ArchConfig, tokens, cache, grants):
     (h, k, v, ks, vs, _), _ = jax.lax.scan(
         body, (h, cache["k"], cache["v"], cache.get("k_scale"),
                cache.get("v_scale"), jnp.int32(0)), params["blocks"])
-    # last granted position per slot (grants==0 -> clipped; caller ignores)
-    last = jnp.maximum(grants - 1, 0)[:, None, None]
-    h_last = jnp.take_along_axis(h, last, axis=1)           # (B, 1, d)
     new_cache = dict(cache, k=k, v=v, length=new_len)
     if ks is not None:
         new_cache.update(k_scale=ks, v_scale=vs)
+    if unembed_all:
+        return _logits_exact(params, cfg, h), new_cache     # (B, T, V)
+    # last granted position per slot (grants==0 -> clipped; caller ignores)
+    last = jnp.maximum(grants - 1, 0)[:, None, None]
+    h_last = jnp.take_along_axis(h, last, axis=1)           # (B, 1, d)
     return _logits_exact(params, cfg, h_last)[:, 0], new_cache
+
+
+def lm_verify_paged(params, cfg: ArchConfig, tokens, cache, grants):
+    """Speculative VERIFY step on the prefill lane: tokens (B, T) int32 —
+    row i holds [feed, p_1 .. p_{g-1}, pad] where feed is the slot's next
+    input token and p_1.. are draft proposals (``grants[i]`` = g rows are
+    real; 0 = slot idle); cache/grants as in ``lm_prefill_paged``.
+
+    Runs the SAME ragged chunk forward as ``lm_prefill_paged`` (one
+    scatter + one causal kernel step per layer) but unembeds ALL T
+    positions at f32 (PR-7 discipline: every position here DECIDES a
+    token) and reduces accept lengths on device:
+
+      * ``greedy[b, t]`` = argmax over position t's logits — the target's
+        greedy successor of tokens[b, :t+1].
+      * proposal p_{t+1} = tokens[b, t+1] is ACCEPTED iff every earlier
+        proposal matched and ``greedy[b, t] == tokens[b, t+1]`` — i.e.
+        ``accept[b]`` is the longest common prefix of the target's greedy
+        continuations and the draft's proposals.
+      * the tick then emits ``greedy[b, :accept[b] + 1]``: the accepted
+        proposals ARE the target's greedy tokens, and position accept[b]
+        contributes the BONUS token (the target's correction after the
+        first mismatch, or the free extra token after an all-accept) —
+        so the emitted stream is bit-identical to plain greedy decode by
+        construction.
+
+    Returns (greedy (B, T) int32, accept (B,) int32 in [0, g-1], new
+    cache with length advanced by the FULL grant — the caller truncates
+    rejected rows by rolling ``length`` back to base + accept + 1, which
+    the paged cache already supports)."""
+    T = tokens.shape[1]
+    grants = jnp.asarray(grants, jnp.int32)
+    logits, new_cache = lm_prefill_paged(params, cfg, tokens, cache,
+                                         grants, unembed_all=True)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, T)
+    # leading-run length of proposal matches, masked to the g-1 proposals
+    prop_ok = (greedy[:, :T - 1] == tokens[:, 1:])
+    in_grant = (jnp.arange(T - 1, dtype=jnp.int32)[None, :]
+                < (grants - 1)[:, None])
+    run = jnp.cumprod((prop_ok & in_grant).astype(jnp.int32), axis=1)
+    accept = run.sum(axis=1)                                 # (B,)
+    accept = jnp.minimum(accept, jnp.maximum(grants - 1, 0))
+    return greedy, accept, new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -129,6 +129,16 @@ class ServeConfig:
                                       # DEADLINE_EXCEEDED with partial output
     quarantine_ticks: int = 2         # ticks a slot sits out after emitting
                                       # a poisoned (out-of-vocab) token
+    # --- speculative decoding (draft-and-verify) -----------------------------
+    spec_k: int = 0                   # draft proposals per decode tick
+                                      # (0 = off).  > 0 needs a draft
+                                      # model/params handed to PagedEngine,
+                                      # greedy serving (temperature == 0 —
+                                      # a proposal is accepted iff it
+                                      # equals the target argmax) and the
+                                      # prefill lane (the target verifies
+                                      # the ragged [feed, p_1..p_k] block
+                                      # in ONE prefill-lane dispatch)
 
 
 class RequestStatus(enum.Enum):
@@ -504,11 +514,25 @@ class PagedEngine:
     pool-exhausted ``RuntimeError`` survives only behind
     ``preempt=False``.
 
+    SPECULATIVE DECODING (``cfg.spec_k > 0``, greedy-only): a small DRAFT
+    model with its own page pool proposes up to k tokens per granted slot
+    per tick (one forced-token decode dispatch; a slot the draft has not
+    caught up with replays its history through the draft's prefill lane
+    first), and the TARGET verifies the whole ragged [feed, p_1..p_k]
+    block in ONE prefill-lane dispatch.  A proposal is accepted iff it
+    equals the target's greedy argmax at its position, so the emitted
+    stream is BIT-IDENTICAL to plain greedy decode while a tick emits up
+    to k+1 tokens per slot.  Rejected rows roll back by length truncation
+    on both caches (pages stay owned; nothing past a slot's length is
+    read or shared), preemption rebuilds the draft by catch-up, and
+    deadlines stay tick-denominated.
+
     Decoder-only attention LMs only (a joining SSM slot would inherit the
     previous occupant's state; whisper needs per-request cross caches).
     """
 
-    def __init__(self, model: Model, params, cfg: ServeConfig):
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 draft_model: Optional[Model] = None, draft_params=None):
         if model.cfg.is_encoder_decoder or model.cfg.mamba_version:
             raise ValueError("paged serving requires a decoder-only "
                              "attention LM (per-slot page tables)")
@@ -516,6 +540,34 @@ class PagedEngine:
         self.params = params
         self.cfg = cfg
         B = cfg.max_batch
+        # --- speculative decoding: draft-and-verify ----------------------
+        self._spec = cfg.spec_k > 0
+        if self._spec:
+            if draft_model is None:
+                raise ValueError(
+                    "spec_k > 0 needs a draft model: "
+                    "PagedEngine(model, params, cfg, draft_model=, "
+                    "draft_params=)")
+            if cfg.temperature != 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: a proposal is "
+                    "accepted iff it equals the target argmax "
+                    "(set temperature=0)")
+            if not cfg.prefill_lane:
+                raise ValueError(
+                    "speculative decoding verifies through the ragged "
+                    "prefill lane (set prefill_lane=True)")
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    "draft and target must share a tokenizer: vocab "
+                    f"{draft_model.cfg.vocab_size} != "
+                    f"{model.cfg.vocab_size}")
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        # decode chunk per tick: a speculative tick verifies up to
+        # spec_k proposals plus the feed token in one ragged dispatch
+        self._chunk = (cfg.spec_k + 1) if self._spec \
+            else max(1, cfg.prefill_chunk)
         self._many = jax.jit(model.decode_many_paged,
                              static_argnames=("num_steps", "temperature"),
                              donate_argnums=(2, 3))   # cache + key
@@ -579,9 +631,40 @@ class PagedEngine:
             # pre-compile the COW flush for every batch size up to the
             # per-tick bound (capped at 8; rarer, larger bursts compile
             # lazily once) so a COW tick never pays an XLA compile
-            chunk = max(1, cfg.prefill_chunk, self._chunk_tokens)
+            chunk = max(self._chunk, self._chunk_tokens)
             bound = B * (-(-chunk // self.kv.page) + 1)
             self.kv.warm_copy(tuple(range(1, min(bound, 8) + 1)))
+        # --- draft-side state (speculative mode) --------------------------
+        self.dkv: Optional[PagedKVCache] = None
+        if self._spec:
+            # the target's VERIFY cell: all k+1 positions unembedded at
+            # f32, the accepted prefix reduced on device (no PRNG)
+            self._verify = jax.jit(model.verify_many_paged,
+                                   donate_argnums=(2,))
+            # draft cells: the forced-token decode twin (PROPOSE — the
+            # steady-state <=1-token history deficit replays as a forced
+            # step 0) and the prefill lane (CATCH-UP after a fresh admit,
+            # a prefix-share adoption, or a preempt-resume)
+            self._draft_many = jax.jit(
+                draft_model.decode_many_paged,
+                static_argnames=("num_steps", "temperature"),
+                donate_argnums=(2, 3))
+            self._draft_prefill = jax.jit(
+                draft_model.prefill_many_paged,
+                static_argnames=("temperature",),
+                donate_argnums=(2, 3))
+            # the draft keeps its own page pool: no sharing and no
+            # retention (rejected rows roll back by length truncation;
+            # a preempted slot rebuilds through catch-up)
+            self.dkv = PagedKVCache(draft_model, B, cfg.max_seq,
+                                    page_size=cfg.page_size,
+                                    max_blocks=cfg.max_blocks,
+                                    num_pages=cfg.num_pages)
+            self._dtable_dev = jnp.zeros((B, self.dkv.max_blocks),
+                                         jnp.int32)
+            self._dlength_dev = jnp.zeros((B,), jnp.int32)
+            self.dkv.dirty.clear()       # mirrors start in sync (all zero)
+            self._dkey = jax.random.key(cfg.seed + 1)
         self._pindex = _PrefixIndex()
         self.scheduler = TickScheduler(fairness=cfg.fairness,
                                        tick_budget=cfg.tick_budget,
@@ -616,6 +699,14 @@ class PagedEngine:
         self._poison_slots: Set[int] = set()
         self.tokens_out = 0               # kept (non-discarded) tokens
         self.tokens_appended = 0          # fresh K/V rows written (physical)
+        # --- speculative decoding counters -------------------------------
+        self.spec_proposed = 0            # draft tokens offered to verify
+        self.spec_accepted = 0            # proposals the target accepted
+        self.spec_trunc_tokens = 0        # target K/V rows rolled back
+        self.draft_dispatches = 0         # draft catch-up + propose calls
+        self.verify_dispatches = 0        # target verify calls
+        self.draft_dispatch_trace: List[int] = []   # per busy tick
+        self.verify_dispatch_trace: List[int] = []
         self.shared_tokens = 0            # prompt tokens served by reference
         self.joins = 0
         self.stalls = 0
@@ -770,6 +861,8 @@ class PagedEngine:
         self._feed[i] = self.cfg.pad_id
         self._pindex.drop(i)
         self.kv.free_slot(i, retain_tokens=history if self._retain else None)
+        if self.dkv is not None:          # draft pages never retain
+            self.dkv.free_slot(i)
 
     def _preempt(self, i: int, quarantine: bool = False) -> None:
         """Evict slot ``i`` and requeue its request AT THE FRONT with all
@@ -923,6 +1016,228 @@ class PagedEngine:
     def defrag(self) -> None:
         self.kv.defrag()
 
+    def _sync_dirty(self, kv: PagedKVCache, table_dev, length_dev):
+        """Patch a device table/length mirror pair at ``kv``'s dirty rows.
+        The row batch is padded to a power of two (repeating the first
+        dirty row — an idempotent scatter) so the patcher's compile
+        universe is log2(B)-bounded, not one program per distinct count.
+        Returns the updated mirrors plus the bytes uploaded (0 = the
+        mirrors were already in sync, no dispatch)."""
+        if not kv.dirty:
+            return table_dev, length_dev, 0
+        rows = sorted(kv.dirty)
+        kv.dirty.clear()
+        pad = 1 << (len(rows) - 1).bit_length()
+        rows = np.asarray(rows + rows[:1] * (pad - len(rows)), np.int32)
+        table_dev, length_dev = self._patch(
+            table_dev, length_dev, jnp.asarray(rows),
+            jnp.asarray(kv.table[rows]), jnp.asarray(kv.length[rows]))
+        return table_dev, length_dev, \
+            int(rows.size) * (kv.max_blocks + 1) * 4
+
+    # -- speculative decoding ----------------------------------------------------
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of draft proposals the target accepted (1.0 until the
+        first speculative tick)."""
+        return self.spec_accepted / max(1, self.spec_proposed)
+
+    def _spec_decode(self, steps, chunk: int, cache):
+        """One speculative decode tick over the granted slots:
+
+          1. CATCH-UP — a slot whose draft cache is missing more than one
+             history token (fresh admit, prefix-share adoption,
+             preempt-resume: the draft never shares pages, it recomputes)
+             replays the gap through the DRAFT prefill lane in fixed-width
+             chunks until at most one token trails;
+          2. PROPOSE — one draft forced-token decode dispatch, ``num_steps
+             = spec_k + 1`` static: a slot with a 1-token deficit feeds
+             the missing history token and forces the target feed in as
+             step 0, so the deficit never costs an extra dispatch;
+          3. host-sync the proposals (a device wait, reported as such);
+          4. VERIFY — ONE ragged prefill-lane dispatch on the TARGET over
+             [feed, p_1..p_k] per slot, all positions unembedded at f32,
+             the accepted prefix reduced on device.
+
+        Returns (greedy, accept, vgr, cache, upload_bytes, draft_disp,
+        verify_disp, wait_s).  ``greedy``/``accept`` are the verify cell's
+        device outputs (the caller syncs them with the tick's other
+        outputs); ``vgr`` is the (B,) int32 K/V rows the verify actually
+        appended — 1 + proposals, which drops below the planned grant only
+        when the draft pool capped a slot (it then advances one verified
+        token per tick until pages free up)."""
+        cfg = self.cfg
+        B = len(self.slots)
+        dkv = self.dkv
+        upload = 0
+        draft_disp = 0
+        rows = [i for i in range(B)
+                if self.slots[i].active and steps[i] > 0]
+
+        def dcache():
+            c = {"k": dkv.k, "v": dkv.v, "table": self._dtable_dev,
+                 "length": self._dlength_dev}
+            if dkv.quantized:
+                c["k_scale"] = dkv.k_scale
+                c["v_scale"] = dkv.v_scale
+            return c
+
+        def writeback(c):
+            dkv.k, dkv.v = c["k"], c["v"]
+            if dkv.quantized:
+                dkv.k_scale, dkv.v_scale = c["k_scale"], c["v_scale"]
+            self._dtable_dev = c["table"]
+            self._dlength_dev = c["length"]
+
+        # --- catch-up: stream missing history through the draft lane -----
+        Tc = max(self._chunk_tokens, chunk)
+        while True:
+            cg = np.zeros((B,), np.int32)
+            tok_c = np.full((B, Tc), cfg.pad_id, np.int32)
+            for i in rows:
+                hist = self.slots[i].history
+                dlen = int(dkv.length[i])
+                miss = len(hist) - dlen
+                if miss <= 1:
+                    continue
+                take = min(miss, Tc)
+                if not dkv.ensure(i, dlen + take):
+                    # draft pool dry: partial catch-up — the slot keeps
+                    # verifying at grant 1 until draft pages free up
+                    take = min(take,
+                               len(dkv.owned[i]) * dkv.page - dlen)
+                if take <= 0:
+                    continue
+                cg[i] = take
+                tok_c[i, :take] = hist[dlen:dlen + take]
+            if not cg.any():
+                break
+            self._dtable_dev, self._dlength_dev, b = self._sync_dirty(
+                dkv, self._dtable_dev, self._dlength_dev)
+            upload += b + B * (Tc + 1) * 4
+            draft_disp += bool(b) + 1
+            _, c, self._dkey = self._draft_prefill(
+                self.draft_params, jnp.asarray(tok_c), dcache(),
+                self._dkey, jnp.asarray(cg), temperature=0.0)
+            writeback(c)
+            dkv.length += cg
+
+        # --- propose: grant = deficit (<= 1) + k proposals per slot ------
+        off = np.zeros((B,), np.int32)
+        dgr = np.zeros((B,), np.int32)
+        k_prop = np.zeros((B,), np.int32)
+        feed_d = np.full((B,), cfg.pad_id, np.int32)
+        forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
+        forced_mask = np.zeros((chunk, B), bool)
+        for i in rows:
+            hist = self.slots[i].history
+            d = len(hist) - int(dkv.length[i])
+            if d > 1:
+                continue                  # still catching up: no proposals
+            k = int(steps[i]) - 1
+            if k and not dkv.ensure(i, len(hist) + k):
+                k = max(0, len(dkv.owned[i]) * dkv.page - len(hist))
+            if d == 0 and k == 0:
+                continue                  # nothing for the draft to do
+            off[i], k_prop[i], dgr[i] = d, k, d + k
+            if d:                         # replay the missing history
+                feed_d[i] = hist[-1]      # token, force the feed in as
+                forced_tok[0, i] = self._feed[i]   # the step-0 output
+                forced_mask[0, i] = True
+            else:
+                feed_d[i] = self._feed[i]
+        toks_d = None
+        if dgr.any():
+            self._dtable_dev, self._dlength_dev, b = self._sync_dirty(
+                dkv, self._dtable_dev, self._dlength_dev)
+            # feed + grants + forced tok/mask — DRAFT-side traffic (the
+            # gated forced_upload_bytes tracks prompt traffic only)
+            upload += b + 2 * B * 4 + chunk * B * (4 + 1)
+            draft_disp += bool(b) + 1
+            toks_d, c, self._dkey = self._draft_many(
+                self.draft_params, jnp.asarray(feed_d)[:, None], dcache(),
+                self._dkey, jnp.asarray(dgr), jnp.asarray(forced_tok),
+                jnp.asarray(forced_mask), num_steps=chunk,
+                temperature=0.0)
+            writeback(c)
+            dkv.length += dgr
+
+        # --- host-sync the proposals (device wait, not host work) --------
+        w0 = time.perf_counter()
+        toks_d_np = np.array(toks_d) if toks_d is not None else None
+        wait = time.perf_counter() - w0
+
+        # --- verify: ONE ragged prefill-lane dispatch on the target ------
+        vocab = self.model.cfg.vocab_size
+        vgr = np.zeros((B,), np.int32)
+        tok_v = np.full((B, chunk), cfg.pad_id, np.int32)
+        for i in rows:
+            tok_v[i, 0] = self._feed[i]
+            k = int(k_prop[i])
+            for s in range(k):
+                t = int(toks_d_np[int(off[i]) + s, i])
+                # clamp: an out-of-range draft sample must not index past
+                # the target embedding (it just gets rejected)
+                tok_v[i, 1 + s] = min(max(t, 0), vocab - 1)
+            vgr[i] = 1 + k
+            self.spec_proposed += k
+        upload += B * (chunk + 1) * 4
+        greedy, accept, cache = self._verify(
+            self.params, jnp.asarray(tok_v), cache, jnp.asarray(vgr))
+        return greedy, accept, vgr, cache, upload, draft_disp, 1, wait
+
+    def _spec_bookkeep(self, vgr, greedy_np, accept_np,
+                       poisoned: Set[int]) -> None:
+        """Post-verify bookkeeping for a speculative tick: emit the
+        accepted prefix plus the bonus token per slot, TRUNCATE the
+        target's rejected K/V rows (length rollback — the pages stay
+        owned and the garbage rows rewrite on the next append; nothing
+        past a slot's length is ever read or shared), and roll the draft
+        cache back to the accepted frontier."""
+        cfg = self.cfg
+        for i, slot in enumerate(self.slots):
+            v = int(vgr[i])
+            if not slot.active or v == 0 or i in poisoned:
+                continue
+            a = int(accept_np[i])
+            kept = a + 1                  # accepted proposals + bonus
+            L = len(slot.history)
+            if kept < v:                  # rejected rows roll back
+                self.kv.length[i] -= v - kept
+                self.kv.dirty.add(i)
+                self.spec_trunc_tokens += v - kept
+            fed = [int(self._feed[i])] \
+                + [int(greedy_np[i, s]) for s in range(kept - 1)]
+            slot.history.extend(fed)
+            if cfg.prefix_sharing:
+                self._pindex.add(i, fed)
+            slot.served += kept
+            self.spec_accepted += a
+            # draft rollback: the propose dispatch appended [feed,
+            # p_1..p_{k-1}] past the shared history — keep the prefix the
+            # target accepted.  All-k accepted leaves a 1-token deficit
+            # (p_k was sampled, never appended) that next tick's forced
+            # replay absorbs.
+            cur = int(self.dkv.length[i])
+            dvalid = min(cur, L + min(kept, v - 1))
+            if dvalid != cur:
+                self.dkv.length[i] = dvalid
+                self.dkv.dirty.add(i)
+            finished = False
+            for s in range(kept):
+                tok = int(greedy_np[i, s])
+                slot.out.append(tok)
+                self.tokens_out += 1
+                if (cfg.eos_id >= 0 and tok == cfg.eos_id) \
+                        or len(slot.out) >= slot.budget:
+                    finished = True
+                    break
+            if finished:
+                self._finish(i)
+            else:
+                self._feed[i] = greedy_np[i, kept - 1]
+
     def step(self) -> None:
         """One engine tick: admit, plan (prefill-lane + decode grants /
         partial grants / batched COW / fairness), sync the dirty rows of
@@ -943,7 +1258,7 @@ class PagedEngine:
         gated), and a pure-decode tick runs the forced-token-free twin
         cell."""
         cfg = self.cfg
-        chunk = max(1, cfg.prefill_chunk)
+        chunk = self._chunk
         T = self._chunk_tokens
         t0 = time.perf_counter()
         self.ticks += 1
@@ -1007,20 +1322,11 @@ class PagedEngine:
         tick_upload = 0
 
         # dirty-row sync of the device table/length mirrors: only rows
-        # admission/COW/eviction/defrag touched; nothing in steady state.
-        # The row batch is padded to a power of two (repeating the first
-        # dirty row — an idempotent scatter) so the patcher's compile
-        # universe is log2(B)-bounded, not one program per distinct count.
-        if self.kv.dirty:
-            rows = sorted(self.kv.dirty)
-            self.kv.dirty.clear()
-            pad = 1 << (len(rows) - 1).bit_length()
-            rows = np.asarray(rows + rows[:1] * (pad - len(rows)), np.int32)
-            self._table_dev, self._length_dev = self._patch(
-                self._table_dev, self._length_dev, jnp.asarray(rows),
-                jnp.asarray(self.kv.table[rows]),
-                jnp.asarray(self.kv.length[rows]))
-            row_bytes = int(rows.size) * (self.kv.max_blocks + 1) * 4
+        # admission/COW/eviction/defrag/truncation touched; nothing in
+        # steady state.
+        self._table_dev, self._length_dev, row_bytes = self._sync_dirty(
+            self.kv, self._table_dev, self._length_dev)
+        if row_bytes:
             self.table_upload_bytes += row_bytes
             tick_upload += row_bytes
             dispatches += 1
@@ -1049,35 +1355,49 @@ class PagedEngine:
                 jnp.asarray(pgr), temperature=cfg.temperature)
             dispatches += 1
 
-        # --- decode lane: the fused scan over decode grants --------------
+        # --- decode lane: the fused scan over decode grants, or (spec
+        # mode) the draft-propose + target-verify pipeline ----------------
         toks = None
+        greedy = accept = None
+        vgr = steps                       # K/V rows the lane appends
+        d_disp = v_disp = 0
+        spec_wait = 0.0
         if steps.any():
-            tick_upload += 2 * B * 4          # feed tokens + step grants
-            feed = jnp.asarray(self._feed)[:, None]
-            steps_dev = jnp.asarray(steps)
-            prompt_in_flight = any(s.active and s.forced and steps[i]
-                                   for i, s in enumerate(self.slots))
-            if prompt_in_flight:
-                # legacy prefill-by-decode (lane disabled): prompts ride
-                # the decode cell as forced tokens
-                forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
-                forced_mask = np.zeros((chunk, B), bool)
-                for i, slot in enumerate(self.slots):
-                    for s in range(min(len(slot.forced), int(steps[i]))):
-                        forced_tok[s, i] = slot.forced[s]
-                        forced_mask[s, i] = True
-                forced_bytes = chunk * B * (4 + 1)
-                self.forced_upload_bytes += forced_bytes
-                tick_upload += forced_bytes
-                toks, cache, self.key = self._many(
-                    self.params, feed, cache, self.key, steps_dev,
-                    jnp.asarray(forced_tok), jnp.asarray(forced_mask),
-                    num_steps=chunk, temperature=cfg.temperature)
+            if self._spec:
+                (greedy, accept, vgr, cache, d_up, d_disp, v_disp,
+                 spec_wait) = self._spec_decode(steps, chunk, cache)
+                tick_upload += d_up
+                dispatches += d_disp + v_disp
+                self.draft_dispatches += d_disp
+                self.verify_dispatches += v_disp
             else:
-                toks, cache, self.key = self._many_plain(
-                    self.params, feed, cache, self.key, steps_dev,
-                    num_steps=chunk, temperature=cfg.temperature)
-            dispatches += 1
+                tick_upload += 2 * B * 4      # feed tokens + step grants
+                feed = jnp.asarray(self._feed)[:, None]
+                steps_dev = jnp.asarray(steps)
+                prompt_in_flight = any(s.active and s.forced and steps[i]
+                                       for i, s in enumerate(self.slots))
+                if prompt_in_flight:
+                    # legacy prefill-by-decode (lane disabled): prompts
+                    # ride the decode cell as forced tokens
+                    forced_tok = np.full((chunk, B), cfg.pad_id, np.int32)
+                    forced_mask = np.zeros((chunk, B), bool)
+                    for i, slot in enumerate(self.slots):
+                        for s in range(min(len(slot.forced),
+                                           int(steps[i]))):
+                            forced_tok[s, i] = slot.forced[s]
+                            forced_mask[s, i] = True
+                    forced_bytes = chunk * B * (4 + 1)
+                    self.forced_upload_bytes += forced_bytes
+                    tick_upload += forced_bytes
+                    toks, cache, self.key = self._many(
+                        self.params, feed, cache, self.key, steps_dev,
+                        jnp.asarray(forced_tok), jnp.asarray(forced_mask),
+                        num_steps=chunk, temperature=cfg.temperature)
+                else:
+                    toks, cache, self.key = self._many_plain(
+                        self.params, feed, cache, self.key, steps_dev,
+                        num_steps=chunk, temperature=cfg.temperature)
+                dispatches += 1
         self.kv.k = cache["k"]
         self.kv.v = cache["v"]
         if self.kv.quantized:
@@ -1085,8 +1405,8 @@ class PagedEngine:
             self.kv.v_scale = cache["v_scale"]
         self._table_dev = cache["table"]
         self._length_dev = cache["length"]    # device already advanced it
-        self.kv.length += steps + pgr         # host mirror of the increment
-        self.tokens_appended += int(steps.sum()) + int(pgr.sum())
+        self.kv.length += vgr + pgr           # host mirror of the increment
+        self.tokens_appended += int(vgr.sum()) + int(pgr.sum())
         self.steps_run += 1
         if cfg.trace_pool:
             self.util_trace.append(self.kv.utilization())
@@ -1095,38 +1415,52 @@ class PagedEngine:
         t1 = time.perf_counter()
         toks_np = np.array(toks) if toks is not None else None  # device wait
         nxt_np = np.array(nxt) if nxt is not None else None
+        greedy_np = np.array(greedy) if greedy is not None else None
+        accept_np = np.array(accept) if accept is not None else None
         t2 = time.perf_counter()
         # poison fault: nonfinite logits make the sampler return garbage —
         # modeled as an out-of-vocab sentinel overwriting the slot's
-        # sampled tokens for this tick
+        # sampled tokens for this tick (in spec mode the WHOLE verified
+        # window poisons — every kept token is garbage, not just one)
         if self._poison_slots:
             for i in self._poison_slots:
                 if 0 <= i < B:
                     if toks_np is not None and steps[i]:
                         toks_np[:, i] = -1
+                    if greedy_np is not None and vgr[i]:
+                        greedy_np[i, :] = -1
                     if nxt_np is not None and pgr[i]:
                         nxt_np[i] = -1
             self._poison_slots.clear()
         # ALWAYS-ON output guard (not fault-plan-gated): a sampled token
         # outside the vocabulary means the slot's logits were garbage —
         # quarantine the slot and requeue the request with its PRE-TICK
-        # output, skipping this tick's bookkeeping for it entirely
+        # output, skipping this tick's bookkeeping for it entirely.  A
+        # speculative tick emits up to k+1 tokens per slot, so the guard
+        # inspects EVERY kept token (accepted prefix + bonus), not one.
         vocab = self.model.cfg.vocab_size
         poisoned: Set[int] = set()
         for i, slot in enumerate(self.slots):
             if not slot.active:
                 continue
-            g, si = int(pgr[i]), int(steps[i])
+            g, si = int(pgr[i]), int(vgr[i])
             if g and slot.prompt_left - g <= 0:   # sampled token is kept
                 t = int(nxt_np[i])
                 if t < 0 or t >= vocab:
                     poisoned.add(i)
             if si and i not in poisoned:
-                for s in range(si):
-                    t = int(toks_np[s, i])
-                    if t < 0 or t >= vocab:
-                        poisoned.add(i)
-                        break
+                if greedy_np is not None:         # speculative tick
+                    for s in range(int(accept_np[i]) + 1):
+                        t = int(greedy_np[i, s])
+                        if t < 0 or t >= vocab:
+                            poisoned.add(i)
+                            break
+                else:
+                    for s in range(si):
+                        t = int(toks_np[s, i])
+                        if t < 0 or t >= vocab:
+                            poisoned.add(i)
+                            break
         # prefill-lane bookkeeping: the chunk's appended tokens are known
         # on the host (feed + forced prefix) — only the ONE sampled token
         # per slot came back, and it matters only when the prompt drained
@@ -1154,8 +1488,13 @@ class PagedEngine:
                 self._finish(i)
             else:
                 self._feed[i] = tok
-        # decode-lane bookkeeping (legacy forced-prefill rides here too)
-        for i, slot in enumerate(self.slots):
+        # decode-lane bookkeeping (legacy forced-prefill rides here too;
+        # a speculative tick's multi-token emit/truncate/rollback lives in
+        # _spec_bookkeep)
+        if greedy_np is not None:
+            self._spec_bookkeep(vgr, greedy_np, accept_np, poisoned)
+        for i, slot in (enumerate(self.slots) if greedy_np is None
+                        else ()):
             si = int(steps[i])
             if not slot.active or si == 0 or i in poisoned:
                 continue
@@ -1191,10 +1530,15 @@ class PagedEngine:
                 self._preempt(i, quarantine=True)
         t3 = time.perf_counter()
         if cfg.trace_ticks:
-            # host cost of the tick = everything but the device wait
-            self.host_ms_trace.append(((t1 - t0) + (t3 - t2)) * 1e3)
+            # host cost of the tick = everything but the device waits
+            # (the mid-tick proposal sync in spec mode is a device wait)
+            self.host_ms_trace.append(
+                ((t1 - t0 - spec_wait) + (t3 - t2)) * 1e3)
             self.dispatch_trace.append(dispatches)
             self.upload_trace.append(tick_upload)
+            if self._spec:
+                self.draft_dispatch_trace.append(d_disp)
+                self.verify_dispatch_trace.append(v_disp)
         self.upload_bytes += tick_upload
 
     # -- bookkeeping -------------------------------------------------------------

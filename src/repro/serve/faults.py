@@ -29,7 +29,11 @@ Event kinds (all handled in ``PagedEngine._apply_faults`` /
     tick (nonfinite-logit stand-in: the engine only ever sees sampled
     ints, so garbage logits manifest as garbage tokens); the engine's
     always-on output guard quarantines the slot and requeues the request
-    with its pre-tick output.
+    with its pre-tick output.  Under SPECULATIVE decoding a tick keeps up
+    to k+1 verified tokens per slot — poison garbages the WHOLE verified
+    window, and the guard inspects EVERY kept token (accepted prefix +
+    bonus), so one bad token anywhere in the window quarantines the slot
+    exactly like a single-token tick; none of the window reaches results.
 
 Plans are plain data — no engine imports — so tests can build them by
 hand or sample them from a seed.

@@ -312,6 +312,53 @@ def test_paged_prefill_empty_slot_isolated():
     assert not np.asarray(got)[1].any()         # empty slot: guarded zeros
 
 
+def test_multipage_prefill_kernel_runs_ceil_grid_steps(monkeypatch):
+    """The prefill kernel's pages_per_step blocking must RUN ceil(NB/P)
+    grid steps along the block axis — asserted on the actual pallas grid
+    of the PREFILL kernel (mirrors the decode-kernel spy above)."""
+    import repro.kernels.decode_attention.prefill_paged as prefill_mod
+    recorded = {}
+    orig = prefill_mod.pltpu.PrefetchScalarGridSpec
+
+    def spy(*args, **kwargs):
+        recorded["grid"] = kwargs.get("grid", args[1] if len(args) > 1
+                                      else None)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(prefill_mod.pltpu, "PrefetchScalarGridSpec", spy)
+    B, T, H, KV, D, page, NB, L = 2, 4, 4, 2, 16, 8, 5, 1
+    args = _prefill_case(0, B, T, H, KV, D, page, NB, L)
+    for pps, steps in ((4, 2), (2, 3), (1, 5)):
+        prefill_mod.paged_prefill_attention_fwd(
+            *args, pages_per_step=pps, interpret=True)
+        assert recorded["grid"] == (B, KV, steps), \
+            f"pages_per_step={pps}: grid {recorded['grid']}"
+
+
+@pytest.mark.parametrize("pps", [1, 2, 4])
+@pytest.mark.parametrize("B,T,H,KV,D,page,NB,L", [
+    (2, 6, 4, 2, 16, 8, 5, 2),    # GQA group 2; 5 % 2 and 5 % 4 != 0
+    (3, 8, 4, 1, 16, 4, 3, 1),    # MQA; NB < P at pps=4; chunk spans pages
+    (1, 5, 8, 8, 32, 8, 4, 2),    # MHA; odd T; NB % pps == 0 at 2 and 4
+    (2, 7, 6, 2, 32, 16, 2, 2),   # group 3; trailing partial page
+])
+def test_multipage_paged_prefill_matches_oracle(pps, B, T, H, KV, D, page,
+                                                NB, L):
+    """Multi-page blocking on the RAGGED PREFILL sweep: P physically-
+    scattered pages per grid step through the online softmax, output equal
+    to the jnp gather oracle across GQA groups, ragged base/grant
+    geometry and page counts not dividing pages_per_step — the shape a
+    speculative verify chunk over a long decode history hits every
+    tick."""
+    from repro.kernels.decode_attention.ops import paged_prefill_attention
+    from repro.kernels.decode_attention.ref import paged_prefill_attention_ref
+    args = _prefill_case(B + T + H + pps, B, T, H, KV, D, page, NB, L)
+    got = paged_prefill_attention(*args, pages_per_step=pps, interpret=True)
+    want = paged_prefill_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_paged_prefill_oracle_matches_dense_causal():
     """Oracle-of-oracle: hand-pack a contiguous cache into pages; the
     prefill gather oracle must equal dense causal attention with the same

@@ -54,6 +54,18 @@ def harness():
     return model, params, oracle
 
 
+@pytest.fixture(scope="module")
+def draft(harness):
+    """1-layer slice of the harness target as a (deliberately weak) draft
+    model — speculation correctness must not depend on accept rate."""
+    import dataclasses as _dc
+    model, params, _ = harness
+    dcfg = _dc.replace(model.cfg, n_layers=1)
+    dparams = dict(params)
+    dparams["blocks"] = jax.tree.map(lambda x: x[:1], params["blocks"])
+    return get_model(dcfg), dparams
+
+
 def _drain(pe, max_ticks=2000):
     """Drain the engine with a hard tick bound (a wedge fails the test,
     not the CI wall clock), then ride out any still-squeezed pages."""
@@ -258,6 +270,38 @@ def test_poison_quarantines_and_resumes(harness):
         label="poison-quarantine resume")
 
 
+def test_poison_under_speculation_quarantines(harness, draft):
+    """SPECULATIVE ticks keep up to k+1 verified tokens at once; a
+    poisoned verify window must be caught in FULL — the guard inspects
+    every kept token, quarantines the slot, requeues with the pre-tick
+    output, and the resumed request still finishes bit-identical to the
+    plain-decode oracle."""
+    model, params, oracle = harness
+    dm, dp = draft
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(0, model.cfg.vocab_size, size=3).astype(np.int32)
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=32, page_size=4, prefill_chunk=2,
+        max_new_tokens=5, quarantine_ticks=2, spec_k=3),
+        draft_model=dm, draft_params=dp)
+    rid = pe.submit(prompt, 5)
+    # tick 1 drains the 3-token prompt (lane) and samples output 1; tick 2
+    # is the first draft-and-verify tick, so the poison garbages a whole
+    # multi-token verify window, not a single sampled token
+    pe.install_faults(FaultPlan([FaultEvent(2, "poison", slot=0)]))
+    res = pe.run()
+    assert pe.quarantines == 1
+    assert pe.status[rid] is RequestStatus.PREEMPTED_RESUMED
+    vocab = model.cfg.vocab_size
+    assert all(0 <= t < vocab for t in res[rid])   # none of the window leaked
+    _assert_tokens_identical(
+        res[rid], oracle.generate_batch([prompt], max_new_tokens=5)[0],
+        label="poison-under-speculation resume")
+    pe.kv.check()
+    pe.dkv.check()
+    assert pe.kv.live_pages == 0
+
+
 def test_squeeze_starves_then_recovers(harness):
     """Pool pressure that seizes most of the free list forces idle ticks
     or preemptions but never wedges: pages release on schedule, the
@@ -319,7 +363,8 @@ def test_dropped_grant_is_retried(harness):
 # oversubscription fuzz: requests >> pool x deadlines x cancels x faults
 # ---------------------------------------------------------------------------
 
-def _overload_fuzz(model, params, oracle, seed, *, with_faults):
+def _overload_fuzz(model, params, oracle, seed, *, with_faults,
+                   spec=None, extra_events=()):
     """One seeded oversubscribed schedule.  Pool: 7 allocatable pages
     (28 tokens); load: 10 requests of up to 13 tokens each, submitted in
     bursts, 30% carrying tight deadlines, ~15% cancelled mid-flight,
@@ -327,16 +372,25 @@ def _overload_fuzz(model, params, oracle, seed, *, with_faults):
     pool invariants, typed terminality for every rid, leak-freedom after
     drain, and EXACT output identity for every request that ran to
     completion (sampled positions unembed at f32, so paged and oracle
-    argmax agree bit-for-bit)."""
+    argmax agree bit-for-bit).
+
+    ``spec=(k, draft_model, draft_params)`` runs the whole schedule on a
+    SPECULATIVE engine — the draft pool shares the same tiny page budget,
+    so draft-stall partial catch-up and k=0 verify ticks get exercised
+    alongside the faults.  ``extra_events`` appends hand-placed faults to
+    the random plan (e.g. guaranteed poison ticks)."""
     rng = np.random.RandomState(seed)
     cfg = model.cfg
+    spec_k, dm, dp = spec if spec else (0, None, None)
     pe = PagedEngine(model, params, ServeConfig(
         max_batch=3, max_seq=48, page_size=4, num_pages=8,
-        prefill_chunk=3, max_new_tokens=max(BUDGETS)))
+        prefill_chunk=3, max_new_tokens=max(BUDGETS), spec_k=spec_k),
+        draft_model=dm, draft_params=dp)
     if with_faults:
-        pe.install_faults(FaultPlan.random(seed, n_events=5, max_tick=25,
-                                           max_batch=3, max_pages=3,
-                                           max_duration=4))
+        plan = FaultPlan.random(seed, n_events=5, max_tick=25,
+                                max_batch=3, max_pages=3,
+                                max_duration=4)
+        pe.install_faults(FaultPlan(list(plan.events) + list(extra_events)))
     submitted = {}
     pending = [(rng.randint(0, cfg.vocab_size,
                             size=rng.choice(PROMPT_LENS)).astype(np.int32),
@@ -366,6 +420,8 @@ def _overload_fuzz(model, params, oracle, seed, *, with_faults):
     pe.kv.check()
     assert not pe.kv.seized
     _assert_drained_clean(pe)
+    if pe.dkv is not None:
+        pe.dkv.check()                     # draft pool partition too
     # typed terminality for EVERY rid ever submitted
     for rid in submitted:
         assert pe.status[rid] in TERMINAL_STATUSES, \
@@ -402,6 +458,25 @@ def test_oversubscription_fuzz(harness, seed):
 def test_oversubscription_fuzz_with_faults(harness, seed):
     model, params, oracle = harness
     _overload_fuzz(model, params, oracle, seed, with_faults=True)
+
+
+@pytest.mark.parametrize("seed", [17])
+def test_oversubscription_fuzz_speculative(harness, draft, seed):
+    """Fuzz seed exercising poison-under-speculation: the random fault
+    plan (squeeze/evict/drop/poison) runs against a SPECULATIVE engine,
+    with two hand-placed poison events guaranteed to land on live ticks —
+    quarantine must absorb a garbaged multi-token verify window without
+    leaking a single token, and every completed request stays bit-
+    identical to the plain-decode oracle."""
+    model, params, oracle = harness
+    dm, dp = draft
+    pe = _overload_fuzz(model, params, oracle, seed, with_faults=True,
+                        spec=(3, dm, dp),
+                        extra_events=(FaultEvent(3, "poison", slot=-1),
+                                      FaultEvent(8, "poison", slot=-1)))
+    assert pe.fault_counts.get("poison", 0) >= 1, \
+        "poison never fired under speculation"
+    assert pe.quarantines >= 1
 
 
 @pytest.mark.slow
