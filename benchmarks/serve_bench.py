@@ -174,6 +174,19 @@ SPECULATIVE = dict(arch="granite-8b", layers=6, batch=2, max_seq=256,
 # re-asserted on the int8 program (pool 33 vs 65 at equal live tokens)
 INT8 = dict(census_d_head=64, census_page=16, census_batch=2,
             census_nb_lo=2, census_nb_hi=8, census_pools=(33, 65))
+# restart: crash consistency.  An overload-sized workload is submitted
+# upfront, the engine writes a full-state snapshot every few ticks, and a
+# fault-plan `kill` drops the live engine mid-drive; recovery restores
+# the newest snapshot into a FRESH engine, resubmits whatever the
+# snapshot predates (rids realign by construction), re-arms the plan
+# without the fired kill, and drains.  Gates: final outputs BIT-IDENTICAL
+# to the uninterrupted oracle, zero non-kill crashes, a recompute-
+# fraction ceiling (appended K/V work beyond the oracle's / the oracle's
+# — the lost snapshot->kill window), and a restore-latency ceiling.
+RESTART = dict(arch="granite-8b", batch=4, max_seq=96, requests=12,
+               prompt_lo=8, prompt_hi=24, out_lo=8, out_hi=16,
+               page_size=8, num_pages=13, prefill_chunk=4,
+               snapshot_every=3, kill_after=8)
 
 
 def _model(arch):
@@ -709,6 +722,122 @@ def run_overload() -> Dict[str, float]:
     }
 
 
+def run_restart() -> Dict[str, float]:
+    """Crash-consistent serving: kill-and-restore mid-drive vs the
+    uninterrupted oracle (see the RESTART config comment).  The restore
+    path is the real one end-to-end — ``latest_snapshot`` picks the
+    newest checksum-valid file, ``restore_engine`` rebuilds a fresh
+    engine, requests the snapshot predates are resubmitted in original
+    order, and the re-armed plan replays the recoverable window
+    deterministically."""
+    import shutil
+    import tempfile
+    from repro.serve import snapshot as snap
+    from repro.serve.engine import (PagedEngine, ServeConfig,
+                                    TERMINAL_STATUSES)
+    from repro.serve.faults import EngineKilled, FaultEvent, FaultPlan
+    r = RESTART
+    cfg, model, params = _model(r["arch"])
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, cfg.vocab_size,
+                         size=rng.randint(r["prompt_lo"], r["prompt_hi"] + 1)
+                         ).astype(np.int32),
+             int(rng.randint(r["out_lo"], r["out_hi"] + 1)))
+            for _ in range(r["requests"])]
+    warm = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 4)]
+
+    def mk(snap_dir=""):
+        return PagedEngine(
+            model, params,
+            ServeConfig(max_batch=r["batch"], max_seq=r["max_seq"],
+                        page_size=r["page_size"],
+                        num_pages=r["num_pages"],
+                        prefill_chunk=r["prefill_chunk"],
+                        trace_pool=False,
+                        snapshot_every_ticks=r["snapshot_every"]
+                        if snap_dir else 0,
+                        snapshot_dir=snap_dir))
+
+    # ORACLE: identical engine + workload, never killed
+    pe = mk()
+    _drive(pe, warm)                                 # compile all cells
+    orids = [pe.submit(p, mnt) for p, mnt in reqs]
+    a0 = pe.tokens_appended
+    while pe.busy:
+        pe.step()
+    oracle = {rid: [int(t) for t in pe.results[rid]] for rid in orids}
+    oracle_appended = max(1, pe.tokens_appended - a0)
+
+    snap_dir = tempfile.mkdtemp(prefix="serve-restart-")
+    try:
+        pe = mk(snap_dir)
+        _drive(pe, warm)
+        plan = FaultPlan([FaultEvent(pe.ticks + r["kill_after"], "kill")])
+        pe.install_faults(plan)
+        submitted = []
+        for p, mnt in reqs:
+            submitted.append((pe.submit(p, mnt), p, mnt))
+        rids = [rid for rid, _, _ in submitted]
+        work = 0
+        base = pe.tokens_appended
+        kills = crashed = replayed = 0
+        restore_ms = 0.0
+        while pe.busy:
+            try:
+                pe.step()
+            except EngineKilled as e:
+                kills += 1
+                work += pe.tokens_appended - base    # incl. the lost window
+                latest = snap.latest_snapshot(snap_dir)
+                fresh = mk(snap_dir)
+                t0 = time.perf_counter()
+                if latest is not None:
+                    snap.restore_engine(fresh, latest)
+                restore_ms += (time.perf_counter() - t0) * 1e3
+                # requests the snapshot predates resubmit in original
+                # order — the rid counter was snapshotted, so they
+                # realign exactly
+                for rid, p, mnt in submitted:
+                    if rid >= fresh._next_rid:
+                        assert fresh.submit(p, mnt) == rid
+                plan = plan.without_kills_through(e.tick)
+                fresh.install_faults(plan)
+                replayed += max(0, e.tick - fresh.ticks)
+                pe = fresh
+                base = pe.tokens_appended
+            except Exception:
+                crashed += 1                         # gated to stay 0
+                break
+        work += pe.tokens_appended - base
+        got = {rid: [int(t) for t in pe.results.get(rid, [])]
+               for rid in rids}
+        identity = got == oracle
+        all_terminal = all(pe.status.get(rid) in TERMINAL_STATUSES
+                           for rid in rids)
+        # snapshot write cost + size, measured on the drained engine (a
+        # busier snapshot is the same pools + a longer queue JSON)
+        t0 = time.perf_counter()
+        path = snap.save_snapshot(
+            pe, snap.snapshot_path(snap_dir, pe.ticks + 1))
+        write_ms = (time.perf_counter() - t0) * 1e3
+        snapshot_bytes = os.path.getsize(path)
+        snapshots = pe.snapshots_written
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+    return {
+        "restart_token_identity": float(identity and all_terminal),
+        "restart_crashed_ticks": float(crashed),
+        "restart_kills": float(kills),
+        "restart_restore_ms": restore_ms,
+        "restart_snapshot_write_ms": write_ms,
+        "restart_snapshot_bytes": float(snapshot_bytes),
+        "restart_snapshots_written": float(snapshots),
+        "restart_ticks_replayed": float(replayed),
+        "restart_recompute_fraction": (work - oracle_appended)
+        / oracle_appended,
+    }
+
+
 def run_speculative() -> Dict[str, float]:
     """Speculative decoding: draft-and-verify multi-token decode ticks on
     the long-decode workload, against the SAME engine with speculation
@@ -968,6 +1097,20 @@ def bench_lines_from(stats: Dict[str, float]) -> List[str]:
             f"draft={stats['speculative_draft_dispatches_per_tick']:.2f}"
             f"/verify={stats['speculative_verify_dispatches_per_tick']:.2f}",
         ]
+    if "restart_restore_ms" in stats:
+        lines += [
+            f"serve/restart-restore,{stats['restart_restore_ms']*1e3:.0f},"
+            f"restore_ms={stats['restart_restore_ms']:.1f}"
+            f"/write_ms={stats['restart_snapshot_write_ms']:.1f}"
+            f"/bytes={stats['restart_snapshot_bytes']:.0f}",
+            f"serve/restart-recompute,0,"
+            f"frac={stats['restart_recompute_fraction']:.2f}"
+            f"/ticks_replayed={stats['restart_ticks_replayed']:.0f}",
+            f"serve/restart-safety,0,"
+            f"token_identity={stats['restart_token_identity']:.0f}"
+            f"/crashed_ticks={stats['restart_crashed_ticks']:.0f}"
+            f"/kills={stats['restart_kills']:.0f}",
+        ]
     if "cold_prefix_tokens_per_s" in stats:
         lines += [
             f"serve/cold-prefix,0,"
@@ -1002,7 +1145,8 @@ def main() -> int:
     ap.add_argument("--scenario",
                     choices=("smoke", "ragged", "shared-prefix",
                              "long-decode", "long-prompt", "overload",
-                             "cold-prefix", "speculative", "all"),
+                             "cold-prefix", "speculative", "restart",
+                             "all"),
                     default="all",
                     help="smoke: fused-vs-loop decode; ragged: paged vs "
                          "dense waves under mixed lengths; shared-prefix: "
@@ -1020,7 +1164,12 @@ def main() -> int:
                          "ticks (accept rate pinned at 1.0 by a doctored "
                          "target) vs the same engine speculating off — "
                          "bit-identical streams gated, speedup floor "
-                         "gated in verify.sh")
+                         "gated in verify.sh; restart: kill-and-restore "
+                         "crash drill — snapshot every few ticks, kill "
+                         "mid-drive, restore into a fresh engine and "
+                         "drain; bit-identical to the uninterrupted "
+                         "oracle, restore latency and recompute "
+                         "fraction gated")
     ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
                     help="int8 + --scenario ragged runs the quantized-KV "
                          "comparison (int8 vs bf16 pools on the ragged "
@@ -1048,6 +1197,8 @@ def main() -> int:
         stats.update(run_cold_prefix())
     if args.scenario in ("speculative", "all"):
         stats.update(run_speculative())
+    if args.scenario in ("restart", "all"):
+        stats.update(run_restart())
     for line in bench_lines_from(stats):
         print(line)
     if args.json:
@@ -1112,6 +1263,11 @@ def main() -> int:
                 config=SPECULATIVE,
                 **{k: stats[k] for k in stats
                    if k.startswith("speculative_")})
+        if args.scenario in ("restart", "all"):
+            record["restart"] = dict(
+                config=RESTART,
+                **{k: stats[k] for k in stats
+                   if k.startswith("restart_")})
         with open(os.path.abspath(path), "w") as f:
             json.dump(record, f, indent=1)
         print(f"[serve_bench] wrote {os.path.abspath(path)}")

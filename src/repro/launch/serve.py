@@ -13,6 +13,14 @@ import sys
 import numpy as np
 
 
+class SpecCapacityError(ValueError):
+    """``--spec-k`` asks the draft pool for more rows than its block
+    tables can hold: the draft cache must fit every request's full span
+    PLUS k in-flight proposals, and ``PagedKVCache.ensure`` raising
+    mid-run (after minutes of serving) is the failure mode this
+    startup check replaces."""
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -104,6 +112,25 @@ def main() -> int:
                          "pool raises 'page pool exhausted' (the "
                          "pre-overload-safety behavior, kept for measured "
                          "comparison)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="crash consistency: write a full-state snapshot "
+                         "(both page pools verbatim, tables, queue, "
+                         "request lifecycle, RNG keys) every N engine "
+                         "ticks (0 = off); atomic write-then-rename, "
+                         "checksummed, pruned to the newest few files")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="directory for snap-<tick>.bin files (required "
+                         "with --snapshot-every)")
+    ap.add_argument("--restore-from", default="",
+                    help="restore the engine from a snapshot file and "
+                         "resume its in-flight work instead of submitting "
+                         "the demo workload; the snapshot's config "
+                         "fingerprint must match the launch flags (typed "
+                         "fast-fail BEFORE the engine builds)")
+    ap.add_argument("--wedge-ticks", type=int, default=10_000,
+                    help="consecutive idle-but-busy ticks before the "
+                         "engine declares itself wedged and raises (a "
+                         "bookkeeping-bug tripwire, not a tuning knob)")
     ap.add_argument("--sys-prompt-tokens", type=int, default=16,
                     help="shared system-prompt length for the demo "
                          "workload; keep it a MULTIPLE of --page-size — a "
@@ -145,6 +172,18 @@ def main() -> int:
     if args.spec_k and args.temperature != 0.0:
         ap.error("speculative decoding is greedy-only (acceptance compares "
                  "argmax tokens); use --temperature 0")
+    if args.snapshot_every < 0:
+        ap.error("--snapshot-every must be >= 0 (0 = no snapshots)")
+    if args.snapshot_every and not args.snapshot_dir:
+        ap.error("--snapshot-every needs --snapshot-dir (where the "
+                 "snap-<tick>.bin files land)")
+    if args.restore_from and args.whole_batch:
+        ap.error("--restore-from restores the PAGED engine's state; the "
+                 "whole-batch path has no snapshot format — drop "
+                 "--whole-batch")
+    if args.wedge_ticks < 1:
+        ap.error("--wedge-ticks must be >= 1 (idle ticks before the "
+                 "wedge tripwire fires)")
     if args.kv_dtype == "int8" and args.whole_batch:
         ap.error("--kv-dtype int8 quantizes the PAGED page pools (the "
                  "Pallas/reference paged attention path); the whole-batch "
@@ -213,6 +252,40 @@ def main() -> int:
     # staggered budget (new_tokens + 2*(batch-1)) + chunk-overshoot margin
     max_seq = max(64, args.sys_prompt_tokens + 8 + args.new_tokens
                   + 2 * (args.batch - 1) + 16)
+    if args.spec_k:
+        # DRAFT-POOL CAPACITY FAST-FAIL: the draft cache must hold a
+        # request's full span plus k in-flight proposals — past this
+        # bound ``dkv.ensure`` raises deep inside a tick, potentially
+        # minutes into a run.  Same block-table geometry as the target
+        # (max_seq rows), so the check is pure arithmetic.
+        span_max = (args.sys_prompt_tokens + 8 + args.new_tokens
+                    + 2 * (args.batch - 1))
+        if span_max + args.spec_k > max_seq:
+            raise SpecCapacityError(
+                f"--spec-k {args.spec_k} overflows the draft pool: the "
+                f"worst-case request span is {span_max} tokens and the "
+                f"draft block tables hold max_seq={max_seq} rows, so up "
+                f"to {max_seq - span_max} proposals fit in flight; "
+                f"lower --spec-k or --new-tokens/--sys-prompt-tokens")
+    if args.restore_from:
+        # FINGERPRINT FAST-FAIL: compare the snapshot header against the
+        # launch flags BEFORE paying for engine construction — a
+        # mismatched restore must die with a typed error naming the
+        # divergent knob, not a shape error mid-restore
+        from repro.serve.snapshot import SnapshotMismatchError, load_header
+        fp = load_header(args.restore_from)["fingerprint"]
+        want = {"arch": cfg.name, "kv_dtype": cfg.kv_dtype,
+                "max_batch": args.batch, "max_seq": max_seq,
+                "page_size": args.page_size, "spec_k": args.spec_k,
+                "temperature": args.temperature,
+                "prefill_lane": not args.no_prefill_lane}
+        diff = {k: (fp.get(k), v) for k, v in want.items()
+                if fp.get(k) != v}
+        if diff:
+            raise SnapshotMismatchError(
+                f"{args.restore_from}: snapshot was taken from a "
+                f"different serving config (snapshot vs launch flags): "
+                f"{diff}")
     scfg = ServeConfig(max_batch=args.batch, max_seq=max_seq,
                        max_new_tokens=args.new_tokens,
                        temperature=args.temperature,
@@ -229,6 +302,9 @@ def main() -> int:
                        preempt_policy=args.preempt_policy,
                        max_queue=args.max_queue,
                        deadline_ticks=args.deadline_ticks,
+                       wedge_ticks=args.wedge_ticks,
+                       snapshot_every_ticks=args.snapshot_every,
+                       snapshot_dir=args.snapshot_dir,
                        spec_k=args.spec_k)
     rng = np.random.RandomState(0)
 
@@ -263,18 +339,37 @@ def main() -> int:
         print(f"[launch.serve] speculative: draft={args.draft_arch} "
               f"k={args.spec_k} (a decode tick verifies k+1 = "
               f"{args.spec_k + 1} positions in one ragged dispatch)")
-    # shared system prompt + per-request tail: the prefix-sharing showcase.
-    # Budgets are STAGGERED so early slots outlive late admissions — a
-    # joiner only shares pages while a donor is still resident
-    sys_prompt = rng.randint(0, cfg.vocab_size,
-                             size=args.sys_prompt_tokens).astype(np.int32)
-    rids = [engine.submit(
-        np.concatenate(
-            [sys_prompt,
-             rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)
-                         ).astype(np.int32)]),
-        max_new_tokens=args.new_tokens + (i % args.batch) * 2)
-        for i in range(2 * args.batch)]
+    if args.restore_from:
+        # resume the snapshot's in-flight work instead of submitting the
+        # demo workload: queued requests re-admit through the prefill
+        # lane, running slots keep decoding from their restored feed
+        import time
+        from repro.serve.snapshot import restore_engine
+        t0 = time.perf_counter()
+        restore_engine(engine, args.restore_from)
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        rids = sorted(engine.status)
+        print(f"[launch.serve] restored tick {engine.ticks} from "
+              f"{args.restore_from} in {restore_ms:.1f} ms "
+              f"({len(engine.queue)} queued, "
+              f"{sum(s.active for s in engine.slots)} running, "
+              f"{sum(1 for r in rids if engine.status[r].value in ('finished', 'preempted_resumed'))} "
+              f"already terminal)")
+    else:
+        # shared system prompt + per-request tail: the prefix-sharing
+        # showcase.  Budgets are STAGGERED so early slots outlive late
+        # admissions — a joiner only shares pages while a donor is still
+        # resident
+        sys_prompt = rng.randint(0, cfg.vocab_size,
+                                 size=args.sys_prompt_tokens
+                                 ).astype(np.int32)
+        rids = [engine.submit(
+            np.concatenate(
+                [sys_prompt,
+                 rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)
+                             ).astype(np.int32)]),
+            max_new_tokens=args.new_tokens + (i % args.batch) * 2)
+            for i in range(2 * args.batch)]
     results = engine.run()
     util = engine.util_trace
     print(f"[launch.serve] paged: {len(results)} requests, "
@@ -296,8 +391,14 @@ def main() -> int:
     print(f"[launch.serve] overload: {engine.preemptions} preemptions "
           f"({engine.recompute_tokens} recomputed tokens), "
           f"{engine.rejected} rejected, "
-          f"{engine.deadline_exceeded} deadline-exceeded; statuses "
+          f"{engine.deadline_exceeded} deadline-exceeded, "
+          f"{engine.no_progress_ticks} no-progress ticks; statuses "
           + ", ".join(f"{k}={v}" for k, v in n_status.items() if v))
+    if args.snapshot_every:
+        print(f"[launch.serve] crash consistency: "
+              f"{engine.snapshots_written} snapshots written to "
+              f"{args.snapshot_dir} (every {args.snapshot_every} ticks, "
+              f"newest at tick {engine._last_snapshot_tick})")
     if args.spec_k:
         print(f"[launch.serve] speculative: accept rate "
               f"{engine.accept_rate:.2f} ({engine.spec_accepted}/"

@@ -2,5 +2,10 @@ from repro.serve.cache import PagedKVCache  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     PagedEngine, Request, RequestStatus, ServeConfig, ServingEngine,
     TERMINAL_STATUSES)
-from repro.serve.faults import FaultEvent, FaultPlan  # noqa: F401
+from repro.serve.faults import (  # noqa: F401
+    EngineKilled, FaultEvent, FaultPlan)
 from repro.serve.scheduler import TickPlan, TickScheduler  # noqa: F401
+from repro.serve.snapshot import (  # noqa: F401
+    SnapshotCorruptError, SnapshotError, SnapshotMismatchError,
+    latest_snapshot, load_header, restore_engine, save_snapshot,
+    snapshot_path)

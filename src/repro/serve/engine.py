@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.models.model import Model, sample_token
 from repro.serve.cache import PagedKVCache, digest_step
+from repro.serve.faults import EngineKilled
 from repro.serve.scheduler import TickScheduler
 
 
@@ -129,6 +130,23 @@ class ServeConfig:
                                       # DEADLINE_EXCEEDED with partial output
     quarantine_ticks: int = 2         # ticks a slot sits out after emitting
                                       # a poisoned (out-of-vocab) token
+    wedge_ticks: int = 10_000         # consecutive idle-but-busy ticks
+                                      # before the engine declares itself
+                                      # wedged and raises (bookkeeping-bug
+                                      # tripwire; fuzz harnesses shrink it
+                                      # so a wedge fails in seconds)
+    # --- crash consistency (serve/snapshot.py) -------------------------------
+    snapshot_every_ticks: int = 0     # write a full-state snapshot every
+                                      # N ticks (0 = off); restore via
+                                      # snapshot.restore_engine — the
+                                      # continuation is bit-identical to
+                                      # the uninterrupted run
+    snapshot_dir: str = ""            # where snap-<tick>.bin files land
+                                      # (required when snapshotting)
+    snapshot_keep: int = 2            # newest snapshots retained on disk
+                                      # (>= 2 keeps a fallback if the
+                                      # newest file is damaged; < 1
+                                      # keeps everything)
     # --- speculative decoding (draft-and-verify) -----------------------------
     spec_k: int = 0                   # draft proposals per decode tick
                                       # (0 = off).  > 0 needs a draft
@@ -680,6 +698,12 @@ class PagedEngine:
         self.ticks = 0                    # step() calls, incl. idle ticks
                                           # (the deadline / fault clock)
         self._idle = 0                    # consecutive no-work busy ticks
+        self.no_progress_ticks = 0        # CUMULATIVE idle-but-busy ticks
+                                          # (the wedge detector resets
+                                          # _idle on progress; this one
+                                          # survives as a health stat)
+        self.snapshots_written = 0        # crash-consistency snapshots
+        self._last_snapshot_tick = -1     # dedupe guard for the hook
         self._reqs: Dict[int, Request] = {}
         self.status: Dict[int, RequestStatus] = {}
         self.reject_reason: Dict[int, str] = {}
@@ -827,7 +851,13 @@ class PagedEngine:
             self._squeezed = keep
         if self._faults is None:
             return
-        for ev in self._faults.events_at(now):
+        events = self._faults.events_at(now)
+        for ev in events:
+            if ev.kind == "kill":         # process death pre-empts the
+                self.fault_counts["kill"] = \
+                    self.fault_counts.get("kill", 0) + 1
+                raise EngineKilled(now)   # WHOLE tick: no state advanced
+        for ev in events:
             self.fault_counts[ev.kind] = self.fault_counts.get(ev.kind, 0) + 1
             if ev.kind == "squeeze":      # pool pressure: free list shrinks
                 pages = self.kv.seize_pages(ev.pages)
@@ -1305,14 +1335,16 @@ class PagedEngine:
                 # (which release on schedule), so sustained idling means a
                 # bookkeeping bug — fail loudly instead of spinning
                 self._idle += 1
-                if self._idle > 10_000:
+                self.no_progress_ticks += 1
+                if self._idle > cfg.wedge_ticks:
                     raise RuntimeError(
-                        "engine wedged: 10000 consecutive idle ticks with "
-                        "work pending (queue="
+                        f"engine wedged: {cfg.wedge_ticks} consecutive "
+                        "idle ticks with work pending (queue="
                         f"{len(self.queue)}, active="
                         f"{sum(s.active for s in self.slots)}, free="
                         f"{len(self.kv.free)}, seized="
                         f"{len(self.kv.seized)})")
+            self._maybe_snapshot()
             return
         self._idle = 0
         B = len(self.slots)
@@ -1540,6 +1572,27 @@ class PagedEngine:
                 self.draft_dispatch_trace.append(d_disp)
                 self.verify_dispatch_trace.append(v_disp)
         self.upload_bytes += tick_upload
+        self._maybe_snapshot()
+
+    # -- crash consistency (serve/snapshot.py) -----------------------------------
+
+    def _maybe_snapshot(self) -> None:
+        """Write a full-state snapshot at the END of every
+        ``cfg.snapshot_every_ticks``-th tick (idle ticks included — the
+        fault/deadline clock advanced, so the state did).  The write is
+        atomic and old files are pruned to ``cfg.snapshot_keep``; lazy
+        import keeps the engine importable without the snapshot layer."""
+        cfg = self.cfg
+        if cfg.snapshot_every_ticks <= 0 or not cfg.snapshot_dir \
+                or self.ticks % cfg.snapshot_every_ticks != 0 \
+                or self.ticks == self._last_snapshot_tick:
+            return
+        from repro.serve import snapshot as _snap
+        _snap.save_snapshot(
+            self, _snap.snapshot_path(cfg.snapshot_dir, self.ticks))
+        _snap.prune_snapshots(cfg.snapshot_dir, cfg.snapshot_keep)
+        self.snapshots_written += 1
+        self._last_snapshot_tick = self.ticks
 
     # -- bookkeeping -------------------------------------------------------------
 

@@ -33,7 +33,20 @@ Event kinds (all handled in ``PagedEngine._apply_faults`` /
     to k+1 verified tokens per slot — poison garbages the WHOLE verified
     window, and the guard inspects EVERY kept token (accepted prefix +
     bonus), so one bad token anywhere in the window quarantines the slot
-    exactly like a single-token tick; none of the window reaches results.
+    exactly like a single-token tick; none of the window reaches results;
+  * ``kill`` — PROCESS DEATH: the engine raises ``EngineKilled`` at the
+    top of the tick, before any state mutates.  Unlike the four
+    recoverable kinds the live engine cannot absorb a kill — the DRIVER
+    owns recovery: build a fresh engine, ``restore_engine`` it from the
+    newest snapshot (``serve/snapshot.py``), re-arm the plan with
+    ``without_kills_through(fired_tick)`` so the replayed ticks do not
+    re-die on the same event, resubmit whatever the snapshot predates,
+    and keep stepping.  The kill-and-recover property drill pins the
+    result bit-identical to the uninterrupted run.
+
+``FaultPlan.random`` samples only the RECOVERABLE kinds by default —
+random plans drive in-process fuzz loops that expect the engine to
+survive every event; kill drills opt in via ``kinds=``.
 
 Plans are plain data — no engine imports — so tests can build them by
 hand or sample them from a seed.
@@ -45,7 +58,20 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("squeeze", "evict", "drop", "poison")
+RECOVERABLE_KINDS = ("squeeze", "evict", "drop", "poison")
+FAULT_KINDS = RECOVERABLE_KINDS + ("kill",)
+
+
+class EngineKilled(RuntimeError):
+    """Raised by ``PagedEngine._apply_faults`` when a ``kill`` event
+    fires: the simulated process death.  ``tick`` records the tick the
+    kill pre-empted — the tick's work never ran, exactly like a SIGKILL
+    between ticks — so the recovery driver can re-arm the plan with
+    ``FaultPlan.without_kills_through(tick)``."""
+
+    def __init__(self, tick: int):
+        super().__init__(f"engine killed by fault plan at tick {tick}")
+        self.tick = tick
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,11 +125,22 @@ class FaultPlan:
     def last_tick(self) -> int:
         return self.events[-1].tick if self.events else 0
 
+    def without_kills_through(self, tick: int) -> "FaultPlan":
+        """A new plan with every ``kill`` at or before ``tick`` removed.
+        The recovery driver re-arms the restored engine with this:
+        restored ticks replay the recoverable events deterministically
+        (the restored state at the snapshot tick is identical to the
+        original, so squeezes/evicts/drops/poisons between snapshot and
+        kill re-fire and re-resolve identically), but the already-fired
+        kill cannot loop the drill forever."""
+        return FaultPlan([ev for ev in self.events
+                          if not (ev.kind == "kill" and ev.tick <= tick)])
+
     @classmethod
     def random(cls, seed: int, *, n_events: int = 6, max_tick: int = 40,
                max_batch: int = 4, max_pages: int = 4,
                max_duration: int = 6, deep_squeeze: float = 0.25,
-               kinds: Tuple[str, ...] = FAULT_KINDS) -> "FaultPlan":
+               kinds: Tuple[str, ...] = RECOVERABLE_KINDS) -> "FaultPlan":
         """Sample a deterministic plan: ``n_events`` events uniformly over
         ticks [1, max_tick], kinds from ``kinds``, slots from
         [-1, max_batch) (-1 = engine picks / all), squeeze sizes up to

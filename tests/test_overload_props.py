@@ -37,7 +37,8 @@ from repro.serve.faults import FaultEvent, FaultPlan
 from repro.serve.scheduler import TickScheduler
 
 from test_paged_cache_props import (_assert_drained_clean,
-                                    _assert_tokens_identical, _check_tick)
+                                    _assert_tokens_identical, _check_tick,
+                                    _seeded_repro)
 
 BUDGETS = (3, 5)
 PROMPT_LENS = (3, 5, 8)
@@ -359,12 +360,87 @@ def test_dropped_grant_is_retried(harness):
         label="dropped-grant retry")
 
 
+def test_cancel_races_preemption_same_tick(harness):
+    """cancel() landing in the SAME tick window as a forced eviction: the
+    victim is preempted (requeued at the queue front, possibly re-admitted
+    within the very same tick) and then cancelled before the engine runs
+    again.  Exactly ONE terminal transition must happen — CANCELLED, never
+    flipped to PREEMPTED_RESUMED by the stale queue entry — the partial
+    output must be an oracle prefix with no token double-counted across
+    the preempt's emitted-extend and the cancel's, and no page may leak."""
+    model, params, oracle = harness
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, model.cfg.vocab_size, size=n).astype(np.int32)
+               for n in (8, 5)]
+    pe = PagedEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=48, page_size=4, num_pages=8,
+        prefill_chunk=3, max_new_tokens=5))
+    rids = [pe.submit(p, 5) for p in prompts]
+    victim = rids[0]                       # slot 0 holds the first admit
+    # evict at tick 2: the victim has decoded at most a few tokens, so
+    # its recompute (8-token prompt + emitted as forced prefill) cannot
+    # finish inside the eviction tick — the race window provably exists
+    pe.install_faults(FaultPlan([FaultEvent(2, "evict", slot=0)]))
+    raced = False
+    ticks = 0
+    while pe.busy:
+        pre = pe.preemptions
+        pe.step()
+        _check_tick(pe)
+        if not raced and pe.preemptions > pre:
+            # the race: the evict just requeued (or re-admitted) the
+            # victim this tick; cancel it before the engine moves again
+            assert pe.status[victim] not in TERMINAL_STATUSES
+            assert pe.cancel(victim) is True
+            assert pe.cancel(victim) is False, \
+                "second cancel observed a non-terminal status"
+            raced = True
+        ticks += 1
+        assert ticks < 200
+    assert raced, "evict fault never fired"
+    # exactly one terminal transition, stable through the drain
+    assert pe.status[victim] is RequestStatus.CANCELLED
+    assert pe.cancelled == 1
+    assert all(not (s.active and s.rid == victim) for s in pe.slots)
+    assert all(r.rid != victim for r in pe.queue)
+    # no leaked pages: pool partition exact after full drain
+    pe.kv.check()
+    _assert_drained_clean(pe)
+    # victim output: oracle PREFIX, no duplicated tokens from the
+    # preempt/cancel double emitted-extend window
+    want = oracle.generate_batch([prompts[0]], max_new_tokens=5)[0]
+    got = pe.results[victim]
+    assert len(got) < len(want), "victim finished: the race never happened"
+    assert len(got) <= len(want)
+    _assert_tokens_identical(got, want[:len(got)], label="cancel-race victim")
+    # the bystander finishes oracle-identical
+    assert pe.status[rids[1]] in (RequestStatus.FINISHED,
+                                  RequestStatus.PREEMPTED_RESUMED)
+    _assert_tokens_identical(
+        pe.results[rids[1]],
+        oracle.generate_batch([prompts[1]], max_new_tokens=5)[0],
+        label="cancel-race bystander")
+
+
 # ---------------------------------------------------------------------------
 # oversubscription fuzz: requests >> pool x deadlines x cancels x faults
 # ---------------------------------------------------------------------------
 
 def _overload_fuzz(model, params, oracle, seed, *, with_faults,
                    spec=None, extra_events=()):
+    """Seeded-repro wrapper: assertion failures out of the fuzz body carry
+    ``[repro: schedule_seed=N fault_seed=M]`` — the schedule seed and fault
+    seed are the same value here, but both are named so a failure message
+    states exactly how to rebuild BOTH the schedule and the plan."""
+    with _seeded_repro(schedule_seed=seed,
+                       fault_seed=seed if with_faults else None):
+        return _overload_fuzz_impl(model, params, oracle, seed,
+                                   with_faults=with_faults, spec=spec,
+                                   extra_events=extra_events)
+
+
+def _overload_fuzz_impl(model, params, oracle, seed, *, with_faults,
+                        spec=None, extra_events=()):
     """One seeded oversubscribed schedule.  Pool: 7 allocatable pages
     (28 tokens); load: 10 requests of up to 13 tokens each, submitted in
     bursts, 30% carrying tight deadlines, ~15% cancelled mid-flight,

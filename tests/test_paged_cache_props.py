@@ -30,6 +30,8 @@ Prompt lengths and budgets are drawn from small sets so the oracle's
 compile universe stays bounded (one prefill per distinct prompt length, one
 decode_many per distinct budget).
 """
+import contextlib
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -55,6 +57,22 @@ def harness():
                            ServeConfig(max_batch=1, max_seq=64,
                                        max_new_tokens=max(BUDGETS)))
     return model, params, oracle
+
+
+@contextlib.contextmanager
+def _seeded_repro(**seeds):
+    """Stamp every AssertionError escaping a fuzz body with the seeds that
+    reproduce it, so a CI failure is a ONE-LINE repro: paste the printed
+    ``[repro: schedule_seed=N fault_seed=M]`` values back into the harness
+    and the exact failing schedule (and fault plan, if any) replays.  Seeds
+    passed as ``None`` are omitted (e.g. a fuzz run with no fault plan)."""
+    try:
+        yield
+    except AssertionError as e:
+        tag = " ".join(f"{k}={v}" for k, v in seeds.items() if v is not None)
+        head = str(e.args[0]) if e.args else ""
+        e.args = (f"{head}\n[repro: {tag}]",) + tuple(e.args[1:])
+        raise
 
 
 def _assert_tokens_identical(got, want, label=""):
@@ -120,10 +138,19 @@ def _assert_shared_frozen(pe, before):
 
 
 def _fuzz_schedule(model, params, oracle, seed: int, min_ticks: int,
-                   n_requests: int, *, max_batch=3, page_size=4,
-                   prefill_chunk=3, prefill_lane=True,
-                   prefill_chunk_tokens=0, defrag_every=0, prefixes=(),
-                   check_frozen=False) -> dict:
+                   n_requests: int, **kw) -> dict:
+    """Seeded-repro wrapper: any assertion out of the fuzz body carries
+    ``[repro: schedule_seed=N]`` for a one-line replay."""
+    with _seeded_repro(schedule_seed=seed):
+        return _fuzz_schedule_impl(model, params, oracle, seed, min_ticks,
+                                   n_requests, **kw)
+
+
+def _fuzz_schedule_impl(model, params, oracle, seed: int, min_ticks: int,
+                        n_requests: int, *, max_batch=3, page_size=4,
+                        prefill_chunk=3, prefill_lane=True,
+                        prefill_chunk_tokens=0, defrag_every=0, prefixes=(),
+                        check_frozen=False) -> dict:
     """One randomized schedule; returns engine stats.  Asserts the
     refcount/free-list invariants every tick and oracle token-identity at
     the end.  ``prefixes``: pool of common prompt prefixes — when set,
